@@ -1,0 +1,70 @@
+"""Merge results/dryrun + results/roofline JSONs into markdown tables
+(consumed by EXPERIMENTS.md).
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(subdir: str) -> dict[tuple, dict]:
+    out = {}
+    d = os.path.join(ROOT, subdir)
+    if not os.path.isdir(d):
+        return out
+    for name in sorted(os.listdir(d)):
+        if not name.endswith(".json"):
+            continue
+        arch, shape, mesh = name[:-5].split("__")
+        with open(os.path.join(d, name)) as f:
+            out[(arch, shape, mesh)] = json.load(f)
+    return out
+
+
+def dryrun_table() -> str:
+    rows = _load("dryrun")
+    lines = ["| arch | shape | mesh | compile_s | bytes/device | "
+             "collectives (per scan-iteration schedule) |",
+             "|---|---|---|---|---|---|"]
+    for (arch, shape, mesh), r in rows.items():
+        mem = (r["arg_bytes_per_device"] + r["temp_bytes_per_device"]) / 2**30
+        coll = ",".join(f"{k}:{v}" for k, v in
+                        sorted(r.get("collective_counts", {}).items()))
+        lines.append(f"| {arch} | {shape} | {mesh} | "
+                     f"{r.get('compile_s', 0):.0f} | {mem:.2f} GiB | "
+                     f"{coll} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh: str = "pod") -> str:
+    rows = _load("roofline")
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
+             "dominant | MODEL/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in rows.items():
+        if m != mesh:
+            continue
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s'] * 1e3:.2f}ms | "
+            f"{r['memory_s'] * 1e3:.2f}ms | "
+            f"{r['collective_s'] * 1e3:.2f}ms | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single-pod)\n")
+    print(roofline_table("pod"))
+    print("\n## Roofline table (multi-pod)\n")
+    print(roofline_table("multipod"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Batched serving example: prefill a prompt batch, decode with KV caches.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-27b
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-2.7b
+
+Demonstrates the three cache families (ring/local KV for gemma2, compressed
+MLA latents for deepseek, O(1) SSM state for mamba2) behind one interface.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.serve import engine, kvcache
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-27b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=48)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = args.prompt_len + args.gen
+    toks = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    t0 = time.time()
+    cache, logits = engine.prefill(params, cfg, toks, max_len=max_len)
+    print(f"[serve] prefill({args.batch}x{args.prompt_len}) "
+          f"{time.time() - t0:.2f}s; cache = "
+          f"{kvcache.cache_bytes(cache) / 2**20:.1f} MiB "
+          f"({cfg.kv_cache_kind}/{cfg.family})")
+
+    step = jax.jit(lambda c, t, p: engine.decode_step(params, cfg, c, t, p))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    key = jax.random.PRNGKey(1)
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.gen):
+        logits, cache = step(cache, tok,
+                             jnp.asarray(args.prompt_len + i, jnp.int32))
+        key, sub = jax.random.split(key)
+        tok = jax.random.categorical(sub, logits, -1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+    dt = time.time() - t0
+    print(f"[serve] {args.gen} decode steps in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s on this host)")
+    print("[serve] sample token ids:", np.stack(out, 1)[0, :12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: skew-aware matmul-centric JAX training/serving framework.
+
+TPU-native adaptation of "On Performance Analysis of Graphcore IPUs:
+Analyzing Squared and Skewed Matrix Multiplication" (Shekofteh et al., 2023).
+
+Public API:
+    repro.core.skewmm.matmul       -- planned (skew-aware) matmul
+    repro.core.planner.plan_matmul -- the AMP-budgeted block planner
+    repro.configs.registry         -- architecture registry (--arch ids)
+    repro.launch.mesh.make_production_mesh
+"""
+
+__version__ = "0.1.0"

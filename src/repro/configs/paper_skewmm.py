@@ -1,0 +1,16 @@
+"""The paper's own benchmark "architecture": bare skewed/squared matmuls.
+
+Used by the benchmark harness to reproduce Fig. 4/5 and the vertex-count
+table; not part of the 10-arch dry-run grid.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("paper-skewmm")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paper-skewmm", family="dense",
+        n_layers=1, d_model=3584, n_heads=1, n_kv_heads=1, head_dim=128,
+        d_ff=3584, vocab_size=256,
+        mlp_type="gelu", dtype="float32",
+    )

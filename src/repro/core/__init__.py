@@ -1,0 +1,10 @@
+"""The paper's primary contribution, TPU-adapted.
+
+Skew-aware matmul planning under an explicit fast-memory (AMP) budget,
+the planned-matmul primitive used by the whole model zoo, grid/"vertex"
+statistics, and roofline-term extraction from compiled XLA artifacts.
+"""
+
+from repro.core import costmodel, hw, planner, roofline, skewmm, vertexstats
+
+__all__ = ["costmodel", "hw", "planner", "roofline", "skewmm", "vertexstats"]

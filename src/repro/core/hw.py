@@ -1,0 +1,68 @@
+"""TPU v5e hardware model constants.
+
+These are the roofline constants mandated for this reproduction:
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+The IPU paper's analogues (GC200): 62.5 TFLOP/s fp32, 918 MB on-chip SRAM,
+47.5 TB/s aggregate SRAM bandwidth, 350 GB/s inter-chip.  See DESIGN.md §2
+for the adaptation table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float      # FLOP/s per chip, bf16 matmul w/ fp32 accum
+    peak_fp32_flops: float      # FLOP/s per chip for fp32 matmul (3-pass emulation)
+    hbm_bw: float               # bytes/s
+    ici_bw_per_link: float      # bytes/s per ICI link
+    vmem_bytes: int             # usable VMEM per core (fast on-chip memory)
+    mxu_lanes: int = 128        # systolic array minor dim (lane granularity)
+    mxu_sublanes: int = 8       # fp32 sublane granularity
+    hbm_bytes: int = 16 * 1024**3
+    # Per-grid-step scheduling/DMA-issue overhead.  This is the TPU analogue of
+    # the paper's per-vertex overhead: plans with pathological grid sizes (the
+    # "31743 vertices" right-skew blowup) pay this linearly.
+    grid_step_overhead_s: float = 120e-9
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_bf16_flops=197e12,
+    peak_fp32_flops=197e12 / 4,   # bf16x3-style emulation; fp32 is not MXU-native
+    hbm_bw=819e9,
+    ici_bw_per_link=50e9,
+    # Conservative usable VMEM figure; the planner only ever claims
+    # amp * vmem_bytes of it (AMP = the paper's availableMemoryProportion knob).
+    vmem_bytes=64 * 1024**2,
+)
+
+# The paper's chips, kept for the comparison benchmarks (modeled numbers).
+IPU_GC200 = ChipSpec(
+    name="ipu_gc200",
+    peak_bf16_flops=62.5e12,     # GC200 quotes fp16.16 AMP peak ~250; fp32 62.5
+    peak_fp32_flops=62.5e12,
+    hbm_bw=47.5e12,              # aggregate In-Processor SRAM bandwidth
+    ici_bw_per_link=350e9 / 4,
+    vmem_bytes=918 * 1024**2,    # all memory is on-chip
+    grid_step_overhead_s=600e-9, # vertex scheduling is costlier on Poplar
+)
+
+GPU_A30 = ChipSpec(
+    name="gpu_a30",
+    peak_bf16_flops=165e12,
+    peak_fp32_flops=10.3e12,
+    hbm_bw=933e9,
+    ici_bw_per_link=200e9 / 4,
+    vmem_bytes=164 * 1024,       # shared memory per SM — not comparable; unused
+    grid_step_overhead_s=0.0,
+)
+
+
+def peak_flops(chip: ChipSpec, dtype_bytes: int) -> float:
+    """Peak matmul FLOP/s for an element width (2 = bf16, 4 = fp32)."""
+    return chip.peak_bf16_flops if dtype_bytes <= 2 else chip.peak_fp32_flops

@@ -1,0 +1,101 @@
+"""Planned (skew-aware) matmul — the framework's matmul primitive.
+
+Every matmul in every model flows through `matmul()`.  It consults the
+skew-aware planner (AMP-budgeted, aspect-ratio-adaptive — the paper's
+mechanism made explicit) and dispatches to one of two backends:
+
+  * "pallas" — the blocked TPU kernel in `repro.kernels.skew_matmul`, using
+    the planner's block shapes as its BlockSpec tiling.  On CPU this runs in
+    interpret mode (tests/benchmarks only).
+  * "xla"    — `jax.lax.dot_general` with preferred_element_type=f32.  Used
+    for full-model dry-runs (XLA's own tiling then applies; the plan is still
+    computed and logged so the roofline analysis can compare).
+
+Backend resolution: explicit argument > REPRO_MM_BACKEND env var > "xla".
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.core.costmodel import MatmulCost
+from repro.core.planner import plan_matmul
+
+_PLAN_LOG: list[MatmulCost] = []
+_PLAN_LOG_ENABLED = False
+
+
+def enable_plan_log(enabled: bool = True) -> None:
+    global _PLAN_LOG_ENABLED
+    _PLAN_LOG_ENABLED = enabled
+    if enabled:
+        _PLAN_LOG.clear()
+
+
+def plan_log() -> list[MatmulCost]:
+    return list(_PLAN_LOG)
+
+
+def _resolve_backend(backend: str | None) -> str:
+    if backend is not None:
+        return backend
+    return os.environ.get("REPRO_MM_BACKEND", "xla")
+
+
+def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
+           amp: float = 0.45, plan_mode: str = "skew_aware",
+           chip: hw.ChipSpec = hw.TPU_V5E,
+           out_dtype: jnp.dtype | None = None) -> jax.Array:
+    """C[..., m, n] = A[..., m, k] @ B[k, n], skew-planned.
+
+    Leading batch dims of `a` are folded into m (the common LM case:
+    activations (batch, seq, d) @ weights (d, f)).
+    """
+    if b.ndim != 2:
+        raise ValueError(f"rhs must be 2-D (weights), got {b.shape}")
+    *lead, m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+
+    flat_m = m
+    for s in lead:
+        flat_m *= s
+    dtype_bytes = jnp.dtype(a.dtype).itemsize
+    cost = plan_matmul(flat_m, k, n, dtype_bytes=dtype_bytes, amp=amp,
+                       chip=chip, mode=plan_mode)
+    if _PLAN_LOG_ENABLED:
+        _PLAN_LOG.append(cost)
+
+    out_dtype = out_dtype or a.dtype
+    resolved = _resolve_backend(backend)
+    if resolved == "pallas":
+        from repro.kernels import ops  # lazy: kernels import pallas
+        a2 = a.reshape(flat_m, k)
+        out = ops.skew_matmul(a2, b, plan=cost.plan, out_dtype=out_dtype)
+        return out.reshape(*lead, m, n)
+    # XLA backend: fp32 accumulation to match the kernel semantics.
+    out = jax.lax.dot_general(
+        a, b, (((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
+def einsum_mm(spec: str, a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """einsum wrapper for the handful of non-(…mk,kn) contractions.
+
+    Falls back to jnp.einsum with f32 accumulation; exists so models have a
+    single import site for all contractions and the plan log stays complete.
+    """
+    return jnp.einsum(spec, a, b,
+                      preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+# Convenience partials used across the model zoo.
+matmul_xla = partial(matmul, backend="xla")
+matmul_pallas = partial(matmul, backend="pallas")

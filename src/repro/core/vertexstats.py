@@ -1,0 +1,68 @@
+"""Grid-statistics ("vertex count") analogue of the paper's PopVision metrics.
+
+The paper diagnoses the right-skew collapse via the number of vertices the
+Poplar compiler emits (5542 / 5762 / 31743 for left/square/right skew at equal
+FLOPs).  Our analogue for a Pallas plan is the grid-step count together with
+tile-utilization (useful/padded FLOPs) — the two quantities that predict the
+collapse on TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import hw
+from repro.core.costmodel import MatmulCost, MatmulDims
+from repro.core.planner import plan_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexStats:
+    dims: tuple[int, int, int]
+    skew: float                  # log2(m/n); <0 = right-skewed
+    vertex_count: int            # grid steps (paper: Poplar vertex count)
+    tile_utilization: float      # useful/padded FLOPs (paper: Tile Utilisation)
+    vmem_bytes: int
+    bound: str
+    roofline_fraction: float
+
+    def row(self) -> str:
+        m, k, n = self.dims
+        return (f"{m:>7}x{k:>6}x{n:>7}  skew={self.skew:+5.1f}  "
+                f"vertices={self.vertex_count:>7}  util={self.tile_utilization:5.3f}  "
+                f"vmem={self.vmem_bytes / 2**20:6.2f}MiB  {self.bound:<13}  "
+                f"frac={self.roofline_fraction:5.3f}")
+
+
+def stats_for(m: int, k: int, n: int, *, dtype_bytes: int = 2,
+              amp: float = 0.45, mode: str = "skew_aware",
+              chip: hw.ChipSpec = hw.TPU_V5E) -> VertexStats:
+    cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp, chip=chip,
+                       mode=mode)
+    d = MatmulDims(m, k, n, dtype_bytes=dtype_bytes)
+    return VertexStats(
+        dims=(m, k, n), skew=d.skew,
+        vertex_count=cost.grid_steps,
+        tile_utilization=cost.mxu_utilization,
+        vmem_bytes=cost.vmem_bytes,
+        bound=cost.bound,
+        roofline_fraction=cost.roofline_fraction(chip),
+    )
+
+
+def paper_vertex_table(n_out: int = 4096, total: int = 4096 * 4096,
+                       skews: tuple[float, ...] = (16.0, 1.0, 1 / 16.0),
+                       mode: str = "naive") -> list[VertexStats]:
+    """Reproduce the paper's three-way vertex comparison (L / S / R skew).
+
+    Paper semantics: A's aspect ratio m/contraction is varied at constant A
+    size (paper's 5542 / 5762 / 31743 vertex counts for L/S/R).  skew > 1 is
+    left (tall A), < 1 right (wide A).
+    """
+    import math
+    out = []
+    for r in skews:
+        m = max(1, int(round(math.sqrt(total * r))))
+        k = max(1, int(round(math.sqrt(total / r))))
+        out.append(stats_for(m, k, n_out, mode=mode))
+    return out

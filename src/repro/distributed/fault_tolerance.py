@@ -1,0 +1,97 @@
+"""Fault tolerance: retries, straggler deadlines, elastic restart planning.
+
+On a real multi-pod deployment these hooks wrap the device runtime; in this
+CPU container they are exercised by unit tests with injected failures
+(tests/test_fault_tolerance.py).  The mechanisms:
+
+  * StepGuard — runs one training step with a wall-clock deadline (straggler
+    mitigation: a step exceeding `deadline_factor` x the trailing-median is
+    declared straggled; the caller re-dispatches it, in production onto a
+    re-formed mesh that excludes the slow host);
+  * retry_step — bounded retry of a step on transient failure, restoring
+    from the last known-good state (the step function is pure, so replay is
+    exact);
+  * ElasticPlan — given a checkpoint's mesh shape and the surviving device
+    count, pick the largest valid mesh and report the resharding plan
+    (checkpoints are mesh-agnostic, see checkpoint.ckpt).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+
+class StepFailed(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class StepGuard:
+    deadline_factor: float = 3.0
+    min_history: int = 5
+    _history: list = dataclasses.field(default_factory=list)
+
+    def run(self, fn: Callable[[], Any]) -> tuple[Any, bool]:
+        """Returns (result, straggled)."""
+        t0 = time.monotonic()
+        out = fn()
+        dt = time.monotonic() - t0
+        straggled = False
+        if len(self._history) >= self.min_history:
+            med = statistics.median(self._history)
+            straggled = dt > self.deadline_factor * med
+        self._history.append(dt)
+        if len(self._history) > 50:
+            self._history.pop(0)
+        return out, straggled
+
+
+def retry_step(step_fn: Callable[[Any, Any], Any], state: Any, batch: Any,
+               *, max_retries: int = 2,
+               on_failure: Callable[[int, Exception], None] | None = None):
+    """Run step_fn(state, batch), replaying from `state` on failure.
+
+    step_fn is pure (pjit'd), so re-execution from the same inputs is
+    bit-exact; `state` is only replaced on success, which is what makes the
+    retry safe (no torn optimizer updates).
+    """
+    err: Exception | None = None
+    for attempt in range(max_retries + 1):
+        try:
+            return step_fn(state, batch)
+        except StepFailed as e:          # injected/transient failures only
+            err = e
+            if on_failure:
+                on_failure(attempt, e)
+    raise err
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_mesh: tuple[int, ...]
+    new_mesh: tuple[int, ...]
+    reshard: bool
+
+    @property
+    def chips(self) -> int:
+        n = 1
+        for s in self.new_mesh:
+            n *= s
+        return n
+
+
+def plan_elastic_restart(old_mesh: tuple[int, ...], surviving_chips: int,
+                         model_axis: int) -> ElasticPlan:
+    """Largest (dp, model) mesh with the fixed model axis that fits the
+    surviving chips.  DP shrinks/grows; TP degree is preserved because the
+    param sharding (and thus per-chip memory) depends on it."""
+    if surviving_chips < model_axis:
+        raise ValueError(
+            f"cannot keep TP={model_axis} with {surviving_chips} chips")
+    dp = surviving_chips // model_axis
+    new = (dp, model_axis)
+    return ElasticPlan(old_mesh=tuple(old_mesh), new_mesh=new,
+                       reshard=tuple(old_mesh) != new)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+skew_matmul      — THE paper kernel: planner-controlled blocked matmul
+flash_attention  — causal/local/softcap blockwise attention (GQA-aware)
+ssd_scan         — Mamba-2 SSD chunked scan
+rglru_scan       — RG-LRU gated linear recurrence
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+Validated in interpret mode on CPU; BlockSpec tiling targets TPU VMEM.
+"""

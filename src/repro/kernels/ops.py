@@ -1,0 +1,81 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+All wrappers: (1) default to interpret mode off-TPU so CPU tests exercise the
+kernel bodies, (2) handle padding to block multiples and slice back, (3) take
+plans from the skew-aware planner when not given explicitly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import BlockPlan
+from repro.core.planner import plan_matmul
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rglru_scan as _rglru
+from repro.kernels import skew_matmul as _mm
+from repro.kernels import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = []
+    for dim, mult in zip(x.shape, mults):
+        target = -(-dim // mult) * mult
+        pads.append((0, target - dim))
+    if any(p for _, p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
+                amp: float = 0.45, out_dtype=None,
+                interpret: bool | None = None) -> jax.Array:
+    """Planned blocked matmul.  a (m, k) @ b (k, n) -> (m, n)."""
+    m, k = a.shape
+    _, n = b.shape
+    if plan is None:
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp).plan
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    bm = min(plan.bm, -(-m // 8) * 8)
+    bk = min(plan.bk, -(-k // 128) * 128)
+    bn = min(plan.bn, -(-n // 128) * 128)
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    out = _mm.skew_matmul_padded(ap, bp, bm=bm, bk=bk, bn=bn,
+                                 out_dtype=out_dtype or a.dtype,
+                                 interpret=interpret)
+    return out[:m, :n]
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,
+                    scale=None, bq=128, bkv=128,
+                    interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    sq, skv = q.shape[2], k.shape[2]
+    bq = min(bq, sq)
+    bkv = min(bkv, skv)
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, bq=bq, bkv=bkv,
+                               interpret=interpret)
+
+
+def ssd_scan(x, dt, a_log, b_mat, c_mat, *, chunk=128,
+             interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    chunk = min(chunk, x.shape[1])
+    return _ssd.ssd_scan(x, dt, a_log, b_mat, c_mat, chunk=chunk,
+                         interpret=interpret)
+
+
+def rglru_scan(x, r_gate, i_gate, a_param, *, c=8.0, chunk=128,
+               interpret: bool | None = None):
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    chunk = min(chunk, x.shape[1])
+    return _rglru.rglru_scan(x, r_gate, i_gate, a_param, c=c, chunk=chunk,
+                             interpret=interpret)

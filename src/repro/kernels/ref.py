@@ -1,0 +1,112 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or a.dtype)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  softcap: float = 0.0, scale: float | None = None,
+                  ) -> jax.Array:
+    """Reference attention. q (B,Hq,S,D); k,v (B,Hkv,S,D); GQA broadcast."""
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qi = jnp.arange(sq)[:, None]
+    ki = jnp.arange(kx.shape[2])[None, :]
+    mask = jnp.ones((sq, kx.shape[2]), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a_log: jax.Array, b_mat: jax.Array,
+            c_mat: jax.Array, *, init_state: jax.Array | None = None,
+            return_state: bool = False):
+    """Mamba-2 SSD reference via the naive sequential recurrence.
+
+    x (B,L,H,P), dt (B,L,H) positive, a_log (H,) with A = -exp(a_log),
+    b_mat/c_mat (B,L,G,S) with H % G == 0.  Returns y (B,L,H,P)
+    [, state (B,H,P,S)].
+    """
+    bsz, length, h, p = x.shape
+    g, s = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))          # (H,)
+    bm = jnp.repeat(b_mat, rep, axis=2).astype(jnp.float32)   # (B,L,H,S)
+    cm = jnp.repeat(c_mat, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                         # (B,H,P),(B,H),(B,H,S)x2
+        decay = jnp.exp(dtt * a[None, :])             # (B,H)
+        dx = xt * dtt[..., None]                      # (B,H,P)
+        state = state * decay[..., None, None] + \
+            jnp.einsum("bhp,bhs->bhps", dx, bt)
+        y = jnp.einsum("bhps,bhs->bhp", state, ct)
+        return state, y
+
+    state0 = (jnp.zeros((bsz, h, p, s), jnp.float32)
+              if init_state is None else init_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(bm, 1, 0), jnp.moveaxis(cm, 1, 0))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    if return_state:
+        return y, state
+    return y
+
+
+def rglru_ref(x: jax.Array, r_gate: jax.Array, i_gate: jax.Array,
+              a_param: jax.Array, *, c: float = 8.0,
+              init_state: jax.Array | None = None,
+              return_state: bool = False):
+    """RG-LRU reference (Griffin eq. 1-4), sequential.
+
+    x, r_gate, i_gate: (B, L, D) — gates are pre-sigmoid logits.
+    a_param: (D,) — "Lambda" parameter, a = sigmoid(a_param).
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t),  a_t = a^(c * r_t).
+    """
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(r_gate.astype(jnp.float32))
+    i = jax.nn.sigmoid(i_gate.astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(a_param.astype(jnp.float32))[None, None]
+    a = jnp.exp(log_a)
+    gated = i * xf
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+
+    def step(h, inp):
+        at, gt, mt = inp
+        h = at * h + mt * gt
+        return h, h
+
+    h0 = (jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(gated, 1, 0),
+          jnp.moveaxis(mult, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    if return_state:
+        return y, h_last
+    return y

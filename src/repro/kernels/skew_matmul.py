@@ -1,0 +1,66 @@
+"""Blocked TPU matmul kernel with planner-chosen BlockSpec tiling.
+
+This is the paper's object of study, TPU-native: a matmul whose
+work-decomposition (block shapes, grid) is *explicitly parameterized* so the
+skew-aware planner (repro.core.planner) controls it, exactly as Poplar's AMP
+knob controls the vertex decomposition on the IPU.
+
+Grid layout: (m_blocks, n_blocks, k_blocks), K innermost and sequential
+("arbitrary"); a VMEM fp32 scratch accumulates partial products across the
+K dimension and the output block is written once on the last K step — the
+C-write-once / A,B-revisit pattern the cost model assumes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_steps: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype",
+                                             "interpret"))
+def skew_matmul_padded(a: jax.Array, b: jax.Array, *, bm: int, bk: int,
+                       bn: int, out_dtype=jnp.float32,
+                       interpret: bool = False) -> jax.Array:
+    """C = A @ B where block shapes divide the (pre-padded) operand dims."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"operands must be pre-padded to block multiples: "
+        f"{(m, k, n)} vs {(bm, bk, bn)}")
+    gm, gn, gk = m // bm, n // bn, k // bk
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, n_k_steps=gk),
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Kept as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax initialization.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; (2,16,16) = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host has (CPU tests): (n_dev/model, model)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (max(n // model, 1), model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

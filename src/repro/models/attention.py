@@ -1,0 +1,142 @@
+"""Attention sublayers: GQA (all dense archs) and MLA (deepseek-v3).
+
+Training/prefill paths use blockwise (memory-efficient) attention; decode
+paths live in repro.serve.decode and reuse the same projection helpers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import skewmm
+from repro.models import layers
+from repro.models.layers import apply_rope, linear_init, rmsnorm, rope_freqs
+
+
+# --------------------------------------------------------------------- GQA
+def init_gqa(key, cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": linear_init(ks[0], d, h * hd, dt),
+        "wk": linear_init(ks[1], d, kv * hd, dt),
+        "wv": linear_init(ks[2], d, kv * hd, dt),
+        "wo": linear_init(ks[3], h * hd, d, dt),
+    }
+    if cfg.attn_qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def gqa_project(x: jax.Array, p: dict, cfg, positions: jax.Array):
+    """x (B,S,D) -> q (B,S,H,hd), k, v (B,S,KV,hd) with rope applied."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = skewmm.matmul(x, p["wq"])
+    k = skewmm.matmul(x, p["wk"])
+    v = skewmm.matmul(x, p["wv"])
+    if cfg.attn_qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.pos_embedding == "rope":
+        cos, sin = rope_freqs(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_attn(x: jax.Array, p: dict, cfg, *, window: int | None,
+             positions: jax.Array, causal: bool = True) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = gqa_project(x, p, cfg, positions)
+    ctx = layers.blockwise_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=causal, window=window, softcap=cfg.attn_softcap,
+        q_positions=positions, kv_positions=positions)
+    ctx = jnp.swapaxes(ctx, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return skewmm.matmul(ctx, p["wo"])
+
+
+# --------------------------------------------------------------------- MLA
+def init_mla(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": linear_init(ks[0], d, qr, dt),
+        "q_norm": jnp.zeros((qr,), dt),
+        "wq_b": linear_init(ks[1], qr, h * (nope + rope_d), dt),
+        # kv_a projects to latent + the shared (MQA-style) rope key
+        "wkv_a": linear_init(ks[2], d, kvr + rope_d, dt),
+        "kv_norm": jnp.zeros((kvr,), dt),
+        "wkv_b": linear_init(ks[3], kvr, h * (nope + vd), dt),
+        "wo": linear_init(ks[4], h * vd, d, dt),
+    }
+
+
+def mla_latent(x: jax.Array, p: dict, cfg, positions: jax.Array):
+    """Compressed KV-cache entries: latent (B,S,kvr) + rope key (B,S,rd)."""
+    kvr, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    kv_a = skewmm.matmul(x, p["wkv_a"])
+    latent = rmsnorm(kv_a[..., :kvr], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., kvr:]
+    cos, sin = rope_freqs(positions, rd, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], cos, sin)[..., 0, :]
+    return latent, k_rope
+
+
+def mla_queries(x: jax.Array, p: dict, cfg, positions: jax.Array):
+    """q_nope (B,S,H,nope), q_rope (B,S,H,rd)."""
+    b, s, _ = x.shape
+    h, nope, rd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = rmsnorm(skewmm.matmul(x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = skewmm.matmul(q, p["wq_b"]).reshape(b, s, h, nope + rd)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_freqs(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_attn(x: jax.Array, p: dict, cfg, *, positions: jax.Array,
+             causal: bool = True, window: int | None = None) -> jax.Array:
+    """Training/prefill MLA: expand latent to full K/V, blockwise attention."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nope, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = mla_queries(x, p, cfg, positions)
+    latent, k_rope = mla_latent(x, p, cfg, positions)
+    kv = skewmm.matmul(latent, p["wkv_b"]).reshape(b, s, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    # queries/keys concat [nope, rope]; rope key is shared across heads.
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rd))],
+        axis=-1)
+    scale = (nope + rd) ** -0.5
+    ctx = layers.blockwise_attention(
+        jnp.swapaxes(q_full, 1, 2), jnp.swapaxes(k_full, 1, 2),
+        jnp.swapaxes(v, 1, 2),
+        causal=causal, window=window, softcap=cfg.attn_softcap, scale=scale,
+        q_positions=positions, kv_positions=positions)
+    ctx = jnp.swapaxes(ctx, 1, 2).reshape(b, s, h * vd)
+    return skewmm.matmul(ctx, p["wo"])
+
+
+def init_attn(key, cfg) -> dict:
+    return init_mla(key, cfg) if cfg.use_mla else init_gqa(key, cfg)
+
+
+def attn(x, p, cfg, *, window, positions, causal=True):
+    if cfg.use_mla:
+        return mla_attn(x, p, cfg, positions=positions, causal=causal,
+                        window=window)
+    return gqa_attn(x, p, cfg, window=window, positions=positions,
+                    causal=causal)

@@ -1,0 +1,76 @@
+"""Block dispatcher: one residual block of any kind, init + forward.
+
+Kinds: attn_global | attn_local | attn_dense | attn_moe | ssm | rec
+(+ enc/dec kinds in encdec.py).  "ssm" blocks are mixer-only (mamba2 has no
+separate FFN); every other kind carries an FFN (dense or MoE).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, rglru, ssm
+from repro.models.layers import rmsnorm
+
+
+def _has_ffn(kind: str) -> bool:
+    return kind != "ssm"
+
+
+def _ffn_is_moe(kind: str) -> bool:
+    return kind.endswith("_moe")
+
+
+def init_block(key, cfg, kind: str) -> dict:
+    dt = layers.dtype_of(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": jnp.zeros((d,), dt)}
+    if kind.startswith("attn"):
+        p["attn"] = attention.init_attn(ks[0], cfg)
+    elif kind == "ssm":
+        p["mixer"] = ssm.init_ssm(ks[0], cfg)
+    elif kind == "rec":
+        p["mixer"] = rglru.init_rec(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(kind):
+        p["ln2"] = jnp.zeros((d,), dt)
+        if _ffn_is_moe(kind):
+            p["moe"] = moe.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = layers.init_mlp(ks[1], cfg)
+    if cfg.use_post_norm:
+        p["post_ln1"] = jnp.zeros((d,), dt)
+        if _has_ffn(kind):
+            p["post_ln2"] = jnp.zeros((d,), dt)
+    return p
+
+
+def block_fwd(x: jax.Array, p: dict, cfg, kind: str,
+              positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Residual block.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.startswith("attn"):
+        window = cfg.local_window if kind == "attn_local" else None
+        h = attention.attn(h, p["attn"], cfg, window=window,
+                           positions=positions)
+    elif kind == "ssm":
+        h = ssm.ssm_mixer(h, p["mixer"], cfg)
+    elif kind == "rec":
+        h = rglru.rec_mixer(h, p["mixer"], cfg)
+    if cfg.use_post_norm:
+        h = rmsnorm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + h
+    if _has_ffn(kind):
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if _ffn_is_moe(kind):
+            h, aux = moe.moe_mlp(h, p["moe"], cfg)
+        else:
+            h = layers.mlp(h, p["mlp"], cfg)
+        if cfg.use_post_norm:
+            h = rmsnorm(h, p["post_ln2"], cfg.norm_eps)
+        x = x + h
+    return x, aux

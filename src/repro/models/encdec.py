@@ -1,0 +1,137 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder consumes precomputed frame embeddings (the audio frontend is a stub
+per the brief); decoder is a causal LM with cross-attention to the encoder
+output.  Same stage-scan structure as transformer.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import skewmm
+from repro.models import attention, layers
+from repro.models.layers import (embed_init, linear_init, rmsnorm,
+                                 sinusoidal_pos)
+
+
+def init_cross_attn(key, cfg) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(ks[0], d, h * hd, dt),
+        "wk": linear_init(ks[1], d, h * hd, dt),
+        "wv": linear_init(ks[2], d, h * hd, dt),
+        "wo": linear_init(ks[3], h * hd, d, dt),
+    }
+
+
+def cross_attn(x, enc_kv, p, cfg):
+    """x (B,S,D) queries; enc_kv = (k, v) precomputed (B,F,H,hd)."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = skewmm.matmul(x, p["wq"]).reshape(b, s, h, hd)
+    k, v = enc_kv
+    ctx = layers.blockwise_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=False)
+    ctx = jnp.swapaxes(ctx, 1, 2).reshape(b, s, h * hd)
+    return skewmm.matmul(ctx, p["wo"])
+
+
+def cross_kv(enc_out, p, cfg):
+    b, f, _ = enc_out.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    k = skewmm.matmul(enc_out, p["wk"]).reshape(b, f, h, hd)
+    v = skewmm.matmul(enc_out, p["wv"]).reshape(b, f, h, hd)
+    return k, v
+
+
+def _init_enc_block(key, cfg) -> dict:
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    dt = layers.dtype_of(cfg)
+    return {"ln1": jnp.zeros((d,), dt),
+            "attn": attention.init_gqa(ks[0], cfg),
+            "ln2": jnp.zeros((d,), dt),
+            "mlp": layers.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_block(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    dt = layers.dtype_of(cfg)
+    return {"ln1": jnp.zeros((d,), dt),
+            "attn": attention.init_gqa(ks[0], cfg),
+            "ln_x": jnp.zeros((d,), dt),
+            "xattn": init_cross_attn(ks[1], cfg),
+            "ln2": jnp.zeros((d,), dt),
+            "mlp": layers.init_mlp(ks[2], cfg)}
+
+
+def init_encdec(cfg, key) -> dict:
+    keys = jax.random.split(key, 4)
+    dt = layers.dtype_of(cfg)
+    enc_keys = jax.random.split(keys[0], cfg.enc_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    params = {
+        "embed": embed_init(keys[2], cfg.vocab_size, cfg.d_model, dt),
+        "enc": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_init_enc_block(k, cfg) for k in enc_keys]),
+        "dec": jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_init_dec_block(k, cfg) for k in dec_keys]),
+        "enc_norm": jnp.zeros((cfg.d_model,), dt),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = linear_init(keys[3], cfg.d_model,
+                                        cfg.vocab_size, dt)
+    return params
+
+
+def encode(params, cfg, frames):
+    """frames (B, F, D) stub embeddings -> encoder output (B, F, D)."""
+    pos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+    x = frames.astype(layers.dtype_of(cfg))
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_pos(pos, cfg.d_model)[None].astype(x.dtype)
+
+    def enc_block(x, p):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = x + attention.gqa_attn(h, p["attn"], cfg, window=None,
+                                   positions=pos, causal=False)
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.mlp(h, p["mlp"], cfg), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(enc_block), x, params["enc"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_hidden(params, cfg, tokens, enc_out):
+    """tokens (B, S), enc_out (B, F, D) -> hidden (B, S, D)."""
+    pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_pos(pos, cfg.d_model)[None].astype(x.dtype)
+
+    def dec_block(carry, p):
+        x = carry
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = x + attention.gqa_attn(h, p["attn"], cfg, window=None,
+                                   positions=pos, causal=True)
+        h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        x = x + cross_attn(h, cross_kv(enc_out, p["xattn"], cfg),
+                           p["xattn"], cfg)
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.mlp(h, p["mlp"], cfg), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(dec_block), x, params["dec"])
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg, tokens, frames):
+    enc_out = encode(params, cfg, frames)
+    return decode_hidden(params, cfg, tokens, enc_out), \
+        jnp.zeros((), jnp.float32)

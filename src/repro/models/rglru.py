@@ -1,0 +1,104 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU + conv + gating).
+
+Model path uses jax.lax.associative_scan over the first-order recurrence
+composition (stable; matches kernels.rglru_scan which is the TPU-runtime
+path, both validated against kernels.ref.rglru_ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import skewmm
+from repro.models import layers
+from repro.models.layers import linear_init
+from repro.models.ssm import causal_conv1d
+
+
+def rglru_jnp(x, r_gate, i_gate, a_param, *, c: float = 8.0,
+              init_state=None, return_state: bool = False):
+    """Associative-scan RG-LRU.  x, gates (B, L, D) logits; a_param (D,)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(r_gate.astype(jnp.float32))
+    gate_i = jax.nn.sigmoid(i_gate.astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(a_param.astype(jnp.float32))[None, None]
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * gate_i * xf
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, b_sc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_state is not None:
+        h = b_sc + a_sc * init_state.astype(jnp.float32)[:, None, :]
+    else:
+        h = b_sc
+    out = h.astype(x.dtype)
+    if return_state:
+        return out, h[:, -1, :]
+    return out
+
+
+def rglru_decode_step(state, xt, rt, it, a_param, *, c: float = 8.0):
+    """One-token RG-LRU update.  state (B, D); xt/rt/it (B, D) logits."""
+    r = jax.nn.sigmoid(rt.astype(jnp.float32))
+    gate_i = jax.nn.sigmoid(it.astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(a_param.astype(jnp.float32))[None]
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * state + mult * gate_i * xt.astype(jnp.float32)
+    return h.astype(xt.dtype), h
+
+
+# ------------------------------------------------------------------ block
+N_GATE_BLOCKS = 16   # RecurrentGemma uses block-diagonal RG-LRU gates
+
+
+def init_rec(key, cfg) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    dt = layers.dtype_of(cfg)
+    nb = min(N_GATE_BLOCKS, w)
+    bw = w // nb
+    ks = jax.random.split(key, 6)
+
+    def block_diag(k):
+        return (jax.random.normal(k, (nb, bw, bw), jnp.float32) * bw ** -0.5
+                ).astype(dt)
+
+    return {
+        "proj_x": linear_init(ks[0], d, w, dt),
+        "proj_gate": linear_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_kernel, w), jnp.float32)
+                   * 0.2).astype(dt),
+        # block-diagonal gate matrices (nb, bw, bw): faithful to
+        # RecurrentGemma and embarrassingly tensor-parallel over nb.
+        "w_r": block_diag(ks[3]),
+        "w_i": block_diag(ks[4]),
+        "a_param": jnp.full((w,), 0.65, jnp.float32),
+        "proj_out": linear_init(ks[5], w, d, dt),
+    }
+
+
+def gate_proj(xc: jax.Array, w_blk: jax.Array) -> jax.Array:
+    """Block-diagonal linear: xc (..., W), w_blk (nb, bw, bw) -> (..., W)."""
+    nb, bw, _ = w_blk.shape
+    xb = xc.reshape(*xc.shape[:-1], nb, bw)
+    out = jnp.einsum("...nw,nwv->...nv", xb, w_blk,
+                     preferred_element_type=jnp.float32).astype(xc.dtype)
+    return out.reshape(*xc.shape)
+
+
+def rec_mixer(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """Full-sequence Griffin recurrent mixer.  x (B, S, D) -> (B, S, D)."""
+    branch = skewmm.matmul(x, p["proj_x"])
+    gate = jax.nn.gelu(
+        skewmm.matmul(x, p["proj_gate"]).astype(jnp.float32)).astype(x.dtype)
+    xc, _ = causal_conv1d(branch, p["conv_w"])
+    r = gate_proj(xc, p["w_r"])
+    i = gate_proj(xc, p["w_i"])
+    h = rglru_jnp(xc, r, i, p["a_param"], c=cfg.rglru_c)
+    return skewmm.matmul(h * gate, p["proj_out"])

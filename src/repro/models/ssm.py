@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD) mixer block.
+
+The model path uses a pure-JAX chunked SSD (differentiable, scan over
+chunks, O(L*chunk) memory) mirroring the Pallas kernel's math
+(repro.kernels.ssd_scan is the TPU-runtime path, validated against
+kernels.ref.ssd_ref).  Single-token recurrent updates for decode live here
+too (used by repro.serve.decode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import skewmm
+from repro.models import layers
+from repro.models.layers import linear_init, rmsnorm
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, *,
+                  state: jax.Array | None = None):
+    """Depthwise causal conv.  x (B, S, C), w (K, C).  state (B, K-1, C)."""
+    k = w.shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else pad
+    return out, new_state
+
+
+def cumsum_logdepth(x: jax.Array, axis: int) -> jax.Array:
+    """Hillis-Steele prefix sum: log2(n) shifted adds.
+
+    §Perf C5: XLA-CPU lowers jnp.cumsum to an O(n) slice-per-element chain
+    (~400 HLO ops at n=128) that dominates the byte accounting; this
+    explicit log-depth form is ~14 ops on every backend."""
+    n = x.shape[axis]
+    off = 1
+    while off < n:
+        shifted = jax.lax.slice_in_dim(x, 0, n - off, axis=axis)
+        pads = [(0, 0)] * x.ndim
+        pads[axis] = (off, 0)
+        x = x + jnp.pad(shifted, pads)
+        off *= 2
+    return x
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, *, chunk: int,
+                init_state=None, return_state: bool = False):
+    """Chunked SSD, same contract as kernels.ref.ssd_ref but O(L*Q) memory.
+
+    x (B,L,H,P), dt (B,L,H) positive, a_log (H,), b/c (B,L,G,S).
+    """
+    bsz, orig_len, h, p = x.shape
+    g, s = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, orig_len)
+    pad = (-orig_len) % q
+    if pad:
+        # zero-padded steps are exact no-ops: dt=0 -> decay=1, contribution=0
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    length = orig_len + pad
+    n = length // q
+    neg_a = -jnp.exp(a_log.astype(jnp.float32))       # (H,)
+
+    # reshape to chunks: (n, B, Q, ...)
+    def chunked(t):
+        return jnp.moveaxis(
+            t.reshape(bsz, n, q, *t.shape[2:]), 1, 0)
+
+    # §Perf C4: the quadratic (B,Q,Q,H) intra-chunk tensors run in the
+    # native dtype with fp32 ACCUMULATION inside the einsums; only the
+    # cross-chunk state (true accumulator) and the log-decay math stay fp32.
+    wdt = x.dtype
+    xc = chunked(x)
+    dtc = chunked(dt.astype(jnp.float32))
+    bc = chunked(jnp.repeat(b_mat, rep, axis=2))
+    cc = chunked(jnp.repeat(c_mat, rep, axis=2))
+
+    rows = jnp.arange(q)[:, None]
+    cols = jnp.arange(q)[None, :]
+    causal = rows >= cols
+
+    def chunk_step(state, inp):
+        xq, dtq, bq, cq = inp                         # (B,Q,H,*) each
+        da = dtq * neg_a[None, None, :]               # (B,Q,H) fp32
+        cum = cumsum_logdepth(da, axis=1)             # (B,Q,H) fp32
+        xdt = xq * dtq[..., None].astype(wdt)         # (B,Q,H,P)
+        decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,Q,Q,H)
+        gmat = jnp.where(causal[None, :, :, None], decay, 0.0)
+        scores = (jnp.einsum("bqhs,bkhs->bqkh", cq, bq,
+                             preferred_element_type=jnp.float32)
+                  * gmat).astype(wdt)
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", scores, xdt,
+                             preferred_element_type=jnp.float32)
+        c_decay = cq.astype(jnp.float32) * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bqhs,bhsp->bqhp", c_decay, state)
+        last = cum[:, -1, :]                          # (B,H)
+        b_decay = (bq.astype(jnp.float32)
+                   * jnp.exp(last[:, None, :] - cum)[..., None]).astype(wdt)
+        state = state * jnp.exp(last)[..., None, None] + \
+            jnp.einsum("bqhs,bqhp->bhsp", b_decay, xdt,
+                       preferred_element_type=jnp.float32)
+        return state, y_intra + y_inter
+
+    from repro.distributed.sharding import constrain
+    state0 = (jnp.zeros((bsz, h, s, p), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+    # pin the scan-carry layout: heads follow "model" (C2) — an unpinned
+    # carry makes XLA reshard the state every chunk iteration.
+    state0 = constrain(state0, "dp", "model", None, None)
+    state, ys = jax.lax.scan(chunk_step, state0, (xc, dtc, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, length, h, p).astype(x.dtype)
+    y = y[:, :orig_len]
+    if return_state:
+        return y, state
+    return y
+
+
+def ssd_decode_step(state, xt, dtt, a_log, bt, ct):
+    """One-token SSD update.  state (B,H,S,P); xt (B,H,P); dtt (B,H);
+    bt/ct (B,G,S).  Returns (y (B,H,P), new state)."""
+    h = xt.shape[1]
+    g = bt.shape[1]
+    rep = h // g
+    neg_a = -jnp.exp(a_log.astype(jnp.float32))
+    bt = jnp.repeat(bt, rep, axis=1).astype(jnp.float32)   # (B,H,S)
+    ct = jnp.repeat(ct, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dtt.astype(jnp.float32) * neg_a[None, :])       # (B,H)
+    dx = xt.astype(jnp.float32) * dtt.astype(jnp.float32)[..., None]
+    state = state * decay[..., None, None] + \
+        jnp.einsum("bhs,bhp->bhsp", bt, dx)
+    y = jnp.einsum("bhsp,bhs->bhp", state, ct)
+    return y.astype(xt.dtype), state
+
+
+# ------------------------------------------------------------------ block
+def init_ssm(key, cfg) -> dict:
+    """Projections AND the depthwise conv are kept per-segment (x/B/C/z/dt)
+    so every tensor boundary is shard-aligned.  The fused-then-split
+    formulation slices the conv output across the channel-sharded dim at a
+    non-aligned offset, which triggers SPMD "involuntary full
+    rematerialization" (a 16x byte blowup — §Perf iteration C3).  Depthwise
+    conv is per-channel, so splitting it is mathematically identical."""
+    d, di = cfg.d_model, cfg.d_inner
+    h, p, g, s = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    dt = layers.dtype_of(cfg)
+    ks = jax.random.split(key, 9)
+
+    def conv_init(k, ch):
+        return (jax.random.normal(k, (cfg.conv_kernel, ch), jnp.float32)
+                * 0.2).astype(dt)
+
+    return {
+        "in_z": linear_init(ks[0], d, di, dt),
+        "in_x": linear_init(ks[1], d, di, dt),
+        "in_b": linear_init(ks[2], d, g * s, dt),
+        "in_c": linear_init(ks[3], d, g * s, dt),
+        "in_dt": linear_init(ks[4], d, h, dt),
+        "conv_x": conv_init(ks[5], di),
+        "conv_b": conv_init(ks[6], g * s),
+        "conv_c": conv_init(ks[7], g * s),
+        "a_log": jnp.zeros((h,), jnp.float32),       # A = -exp(0) = -1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dt),
+        "out_proj": linear_init(ks[8], di, d, dt),
+    }
+
+
+def _ssm_project(x, p, cfg, conv_state=None):
+    """Shared projection + per-segment conv for train and decode paths.
+
+    Layouts pinned explicitly (§Perf C1): SSD head dim follows "model";
+    the small B/C state projections are replicated over "model".
+    conv_state, when given, is a dict {x, b, c} of (B, K-1, ch) tails."""
+    from repro.distributed.sharding import constrain
+    cs = conv_state or {}
+    z = constrain(skewmm.matmul(x, p["in_z"]), "dp", None, "model")
+    xs, conv_sx = causal_conv1d(skewmm.matmul(x, p["in_x"]), p["conv_x"],
+                                state=cs.get("cx"))
+    b_mat, conv_sb = causal_conv1d(skewmm.matmul(x, p["in_b"]), p["conv_b"],
+                                   state=cs.get("cb"))
+    c_mat, conv_sc = causal_conv1d(skewmm.matmul(x, p["in_c"]), p["conv_c"],
+                                   state=cs.get("cc"))
+    xs = constrain(jax.nn.silu(xs), "dp", None, "model")
+    b_mat = constrain(jax.nn.silu(b_mat), "dp", None, None)
+    c_mat = constrain(jax.nn.silu(c_mat), "dp", None, None)
+    dt_raw = skewmm.matmul(x, p["in_dt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    dt = constrain(dt, "dp", None, "model")
+    new_conv = {"cx": conv_sx, "cb": conv_sb, "cc": conv_sc}
+    return z, xs, b_mat, c_mat, dt, new_conv
+
+
+def ssm_mixer(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """Full-sequence Mamba-2 mixer.  x (B, S, D) -> (B, S, D)."""
+    b, length, _ = x.shape
+    di, h, hp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, s = cfg.ssm_groups, cfg.ssm_state
+    z, xs, b_mat, c_mat, dt, _ = _ssm_project(x, p, cfg)
+    y = ssd_chunked(
+        xs.reshape(b, length, h, hp), dt, p["a_log"],
+        b_mat.reshape(b, length, g, s), c_mat.reshape(b, length, g, s),
+        chunk=cfg.ssm_chunk)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * \
+        xs.reshape(b, length, h, hp)
+    y = y.reshape(b, length, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["out_norm"], cfg.norm_eps)
+    return skewmm.matmul(y, p["out_proj"])

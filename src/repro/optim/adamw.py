@@ -1,0 +1,69 @@
+"""Sharded AdamW with bf16 params + fp32 moments (ZeRO-1-ready).
+
+Pure-pytree implementation (no optax in this environment; the substrate is
+built in JAX per the brief).  Moments are stored fp32 regardless of param
+dtype; the update is computed in fp32 and cast back.  ZeRO-1 sharding is
+applied at the pjit level: repro.distributed.sharding gives the moment trees
+a data-axis-sharded PartitionSpec so each data shard owns a slice of the
+optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array            # () int32
+    mu: Any                    # fp32 pytree like params
+    nu: Any                    # fp32 pytree like params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros))
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state, metrics)."""
+        step = state.step + 1
+        gf = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(gf)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9)) \
+            if self.grad_clip else jnp.asarray(1.0)
+        gf = jax.tree.map(lambda g: g * scale, gf)
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, gf)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                          state.nu, gf)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        metrics = {"grad_norm": gnorm, "lr": lr}
+        return new_params, AdamWState(step=step, mu=mu, nu=nu), metrics

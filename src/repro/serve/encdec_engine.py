@@ -1,0 +1,106 @@
+"""Serving engine for encoder-decoder models (seamless-m4t).
+
+Prefill = encode frames + precompute per-layer cross-attention K/V + run the
+decoder prompt; decode = one decoder token against self- and cross-caches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import skewmm
+from repro.models import attention as attn_mod
+from repro.models import encdec, layers, transformer
+from repro.models.layers import rmsnorm, sinusoidal_pos
+from repro.serve import kvcache
+from repro.serve.engine import _place_kv
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def z(*shape):
+        return jnp.zeros((cfg.n_layers, batch) + shape, dt)
+
+    return {"self_k": z(max_len, cfg.n_kv_heads, hd),
+            "self_v": z(max_len, cfg.n_kv_heads, hd),
+            "cross_k": z(enc_len, h, hd),
+            "cross_v": z(enc_len, h, hd)}
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, *, max_len: int):
+    """frames (B,F,D), tokens (B,S) -> (cache, last logits (B,V))."""
+    enc_out = encdec.encode(params, cfg, frames)
+    pos = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_pos(pos, cfg.d_model)[None].astype(x.dtype)
+
+    def dec_block(x, p):
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.gqa_project(h, p["attn"], cfg, pos)
+        entry_k = _place_kv(k, max_len)
+        entry_v = _place_kv(v, max_len)
+        b, s, _ = h.shape
+        ctx = layers.blockwise_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=True,
+            q_positions=pos, kv_positions=pos)
+        ctx = jnp.swapaxes(ctx, 1, 2).reshape(b, s,
+                                              cfg.n_heads * cfg.head_dim)
+        x = x + skewmm.matmul(ctx, p["attn"]["wo"])
+        h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        ck, cv = encdec.cross_kv(enc_out, p["xattn"], cfg)
+        x = x + encdec.cross_attn(h, (ck, cv), p["xattn"], cfg)
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.mlp(h, p["mlp"], cfg)
+        return x, {"self_k": entry_k, "self_v": entry_v,
+                   "cross_k": ck, "cross_v": cv}
+
+    x, entries = jax.lax.scan(dec_block, x, params["dec"])
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = transformer.unembed(params, cfg, h[:, -1])
+    return entries, logits
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens (B,) -> (logits (B,V), new cache)."""
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_pos(jnp.full((1,), pos, jnp.int32),
+                               cfg.d_model)[None].astype(x.dtype)
+
+    def dec_block(x, scanned):
+        p, c = scanned
+        h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k_new, v_new = attn_mod.gqa_project(
+            h, p["attn"], cfg, jnp.full((1,), pos, jnp.int32))
+        k_cache = jax.lax.dynamic_update_slice(c["self_k"], k_new,
+                                               (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(c["self_v"], v_new,
+                                               (0, pos, 0, 0))
+        kv_pos = kvcache.kv_slot_positions(pos, k_cache.shape[1], False)
+        ctx = layers.blockwise_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k_cache, 1, 2),
+            jnp.swapaxes(v_cache, 1, 2), causal=True,
+            q_positions=jnp.full((1,), pos, jnp.int32), kv_positions=kv_pos)
+        b = x.shape[0]
+        ctx = jnp.swapaxes(ctx, 1, 2).reshape(b, 1,
+                                              cfg.n_heads * cfg.head_dim)
+        x = x + skewmm.matmul(ctx, p["attn"]["wo"])
+        h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        x = x + encdec.cross_attn(h, (c["cross_k"], c["cross_v"]),
+                                  p["xattn"], cfg)
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + layers.mlp(h, p["mlp"], cfg)
+        return x, {"self_k": k_cache, "self_v": v_cache,
+                   "cross_k": c["cross_k"], "cross_v": c["cross_v"]}
+
+    x, new_cache = jax.lax.scan(dec_block, x, (params["dec"], cache))
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = transformer.unembed(params, cfg, h[:, 0])
+    return logits, new_cache

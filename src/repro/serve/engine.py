@@ -1,0 +1,295 @@
+"""Serving engine: prefill + single-token decode for every block kind.
+
+`prefill` runs the full-sequence forward while emitting cache entries per
+layer (lax.scan's ys gives the layer-stacked cache for free);
+`decode_step` advances one token against the cache.  Both are pure
+functions of (params, cache, ...) so they pjit/shard cleanly; batch dims
+shard over "data", heads/latents over "model" (see distributed.sharding).
+
+Decode-time attention is the maximally skewed matmul regime of the paper
+(m = batch rows vs n = 32k+ cache columns); the MLA path additionally uses
+the low-rank "absorbed" form so decode never materializes full K/V.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import skewmm
+from repro.models import attention as attn_mod
+from repro.models import layers, moe, rglru, ssm, transformer
+from repro.models.layers import rmsnorm
+from repro.serve import kvcache
+
+
+# =====================================================================
+# prefill
+# =====================================================================
+def _place_kv(t: jax.Array, cache_len: int) -> jax.Array:
+    """t (B, S, ...) -> (B, L, ...) holding the last L tokens at slots
+    pos % L (ring) or [0:S] (full, S <= L)."""
+    b, s = t.shape[:2]
+    if s <= cache_len:
+        pad = [(0, 0), (0, cache_len - s)] + [(0, 0)] * (t.ndim - 2)
+        return jnp.pad(t, pad)
+    tail = t[:, s - cache_len:]
+    slots = jnp.mod(jnp.arange(s - cache_len, s), cache_len)
+    out = jnp.zeros((b, cache_len) + t.shape[2:], t.dtype)
+    return out.at[:, slots].set(tail)
+
+
+def _block_prefill(x, p, cfg: ModelConfig, kind: str, positions, max_len):
+    """block_fwd + cache capture.  Returns (x, cache_entry)."""
+    entry = {}
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.startswith("attn"):
+        window = cfg.local_window if kind == "attn_local" else None
+        clen = kvcache.attn_cache_len(cfg, kind, max_len)
+        if cfg.use_mla:
+            latent, k_rope = attn_mod.mla_latent(h, p["attn"], cfg, positions)
+            entry = {"latent": _place_kv(latent, clen),
+                     "k_rope": _place_kv(k_rope, clen)}
+            h = attn_mod.mla_attn(h, p["attn"], cfg, positions=positions,
+                                  window=window)
+        else:
+            q, k, v = attn_mod.gqa_project(h, p["attn"], cfg, positions)
+            entry = {"k": _place_kv(k, clen), "v": _place_kv(v, clen)}
+            b, s, _ = h.shape
+            ctx = layers.blockwise_attention(
+                jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                jnp.swapaxes(v, 1, 2), causal=True, window=window,
+                softcap=cfg.attn_softcap,
+                q_positions=positions, kv_positions=positions)
+            ctx = jnp.swapaxes(ctx, 1, 2).reshape(
+                b, s, cfg.n_heads * cfg.head_dim)
+            h = skewmm.matmul(ctx, p["attn"]["wo"])
+    elif kind == "ssm":
+        h, entry = _ssm_prefill(h, p["mixer"], cfg)
+    elif kind == "rec":
+        h, entry = _rec_prefill(h, p["mixer"], cfg)
+    if cfg.use_post_norm:
+        h = rmsnorm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + h
+    if kind != "ssm":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind.endswith("_moe"):
+            h, _ = moe.moe_mlp(h, p["moe"], cfg)
+        else:
+            h = layers.mlp(h, p["mlp"], cfg)
+        if cfg.use_post_norm:
+            h = rmsnorm(h, p["post_ln2"], cfg.norm_eps)
+        x = x + h
+    return x, entry
+
+
+def _ssm_prefill(x, p, cfg):
+    b, length, _ = x.shape
+    di, h_, hp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, s_ = cfg.ssm_groups, cfg.ssm_state
+    z, xs, b_mat, c_mat, dt, conv_state = ssm._ssm_project(x, p, cfg)
+    y, state = ssm.ssd_chunked(
+        xs.reshape(b, length, h_, hp), dt, p["a_log"],
+        b_mat.reshape(b, length, g, s_), c_mat.reshape(b, length, g, s_),
+        chunk=cfg.ssm_chunk, return_state=True)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * \
+        xs.reshape(b, length, h_, hp)
+    y = y.reshape(b, length, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["out_norm"], cfg.norm_eps)
+    out = skewmm.matmul(y, p["out_proj"])
+    entry = {"state": state.astype(jnp.float32), **conv_state}
+    return out, entry
+
+
+def _rec_prefill(x, p, cfg):
+    branch = skewmm.matmul(x, p["proj_x"])
+    gate = jax.nn.gelu(skewmm.matmul(x, p["proj_gate"]).astype(jnp.float32)
+                       ).astype(x.dtype)
+    xc, conv_state = ssm.causal_conv1d(branch, p["conv_w"])
+    r = rglru.gate_proj(xc, p["w_r"])
+    i = rglru.gate_proj(xc, p["w_i"])
+    h, lru = rglru.rglru_jnp(xc, r, i, p["a_param"], c=cfg.rglru_c,
+                             return_state=True)
+    out = skewmm.matmul(h * gate, p["proj_out"])
+    return out, {"lru": lru, "conv": conv_state}
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, max_len: int,
+            prefix_embeds=None):
+    """tokens (B, S) -> (cache, last-position logits (B, V)).
+
+    The cache is sized for max_len; positions [0, T) are filled.
+    """
+    x = transformer.embed_tokens(params, cfg, tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    total = x.shape[1]
+    positions = jnp.arange(total, dtype=jnp.int32)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + layers.sinusoidal_pos(positions, cfg.d_model)[None].astype(
+            x.dtype)
+    cache = {}
+    for si, (unit, n) in enumerate(cfg.stage_list()):
+
+        def unit_prefill(x, unit_params, unit=unit):
+            entries = {}
+            for i, kind in enumerate(unit):
+                x, e = _block_prefill(x, unit_params[f"b{i}"], cfg, kind,
+                                      positions, max_len)
+                entries[f"b{i}"] = e
+            return x, entries
+
+        x, stage_cache = jax.lax.scan(
+            jax.checkpoint(unit_prefill), x, params[f"stage{si}"])
+        cache[f"stage{si}"] = stage_cache
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = transformer.unembed(params, cfg, h[:, -1])
+    return cache, logits
+
+
+# =====================================================================
+# decode
+# =====================================================================
+def _decode_gqa(h, p, cfg: ModelConfig, entry, pos, window):
+    """h (B, 1, D); entry k/v (B, L, KV, hd); pos scalar int32."""
+    b = h.shape[0]
+    hq, hd = cfg.n_heads, cfg.head_dim
+    clen = entry["k"].shape[1]
+    is_ring = window is not None
+    q, k_new, v_new = attn_mod.gqa_project(
+        h, p, cfg, jnp.full((1,), pos, jnp.int32))
+    slot = jnp.mod(pos, clen) if is_ring else pos
+    k_cache = jax.lax.dynamic_update_slice(
+        entry["k"], k_new, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        entry["v"], v_new, (0, slot, 0, 0))
+    kv_pos = kvcache.kv_slot_positions(pos, clen, is_ring)
+    ctx = layers.blockwise_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k_cache, 1, 2),
+        jnp.swapaxes(v_cache, 1, 2),
+        causal=True, window=window, softcap=cfg.attn_softcap,
+        q_positions=jnp.full((1,), pos, jnp.int32), kv_positions=kv_pos)
+    ctx = jnp.swapaxes(ctx, 1, 2).reshape(b, 1, hq * hd)
+    out = skewmm.matmul(ctx, p["wo"])
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def _decode_mla(h, p, cfg: ModelConfig, entry, pos):
+    """Absorbed-form MLA decode: scores/values via the latent cache."""
+    b = h.shape[0]
+    nh, nope, rd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    kvr, vd = cfg.kv_lora_rank, cfg.v_head_dim
+    pos1 = jnp.full((1,), pos, jnp.int32)
+    latent_new, k_rope_new = attn_mod.mla_latent(h, p, cfg, pos1)
+    latent = jax.lax.dynamic_update_slice(entry["latent"], latent_new,
+                                          (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(entry["k_rope"], k_rope_new,
+                                          (0, pos, 0))
+    q_nope, q_rope = attn_mod.mla_queries(h, p, cfg, pos1)
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]            # (B, H, *)
+    wkv_b = p["wkv_b"].reshape(kvr, nh, nope + vd)
+    wk, wv = wkv_b[..., :nope], wkv_b[..., nope:]
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))             # (B, H, kvr)
+    scores = jnp.einsum("bhr,blr->bhl", q_lat,
+                        latent.astype(jnp.float32))
+    scores += jnp.einsum("bhd,bld->bhl", q_rope.astype(jnp.float32),
+                         k_rope.astype(jnp.float32))
+    scores *= (nope + rd) ** -0.5
+    if cfg.attn_softcap > 0.0:
+        scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
+    valid = jnp.arange(latent.shape[1]) <= pos
+    scores = jnp.where(valid[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bhl,blr->bhr", w, latent.astype(jnp.float32))
+    ctx = jnp.einsum("bhr,rhv->bhv", ctx_lat, wv.astype(jnp.float32))
+    ctx = ctx.reshape(b, 1, nh * vd).astype(h.dtype)
+    out = skewmm.matmul(ctx, p["wo"])
+    return out, {"latent": latent, "k_rope": k_rope}
+
+
+def _decode_ssm(h, p, cfg: ModelConfig, entry):
+    b = h.shape[0]
+    di, nh, hp = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, s_ = cfg.ssm_groups, cfg.ssm_state
+    z, xs, b_mat, c_mat, dt, conv = ssm._ssm_project(
+        h, p, cfg, conv_state=entry)
+    y, state = ssm.ssd_decode_step(
+        entry["state"], xs[:, 0].reshape(b, nh, hp), dt[:, 0],
+        p["a_log"], b_mat[:, 0].reshape(b, g, s_),
+        c_mat[:, 0].reshape(b, g, s_))
+    y = y + p["d_skip"].astype(y.dtype)[None, :, None] * \
+        xs[:, 0].reshape(b, nh, hp)
+    y = y.reshape(b, 1, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["out_norm"], cfg.norm_eps)
+    return skewmm.matmul(y, p["out_proj"]), {"state": state, **conv}
+
+
+def _decode_rec(h, p, cfg: ModelConfig, entry):
+    branch = skewmm.matmul(h, p["proj_x"])
+    gate = jax.nn.gelu(skewmm.matmul(h, p["proj_gate"]).astype(jnp.float32)
+                       ).astype(h.dtype)
+    xc, conv = ssm.causal_conv1d(branch, p["conv_w"], state=entry["conv"])
+    r = rglru.gate_proj(xc, p["w_r"])
+    i = rglru.gate_proj(xc, p["w_i"])
+    y, lru = rglru.rglru_decode_step(entry["lru"], xc[:, 0], r[:, 0],
+                                     i[:, 0], p["a_param"], c=cfg.rglru_c)
+    out = skewmm.matmul(y[:, None].astype(h.dtype) * gate, p["proj_out"])
+    return out, {"lru": lru, "conv": conv}
+
+
+def _block_decode(x, p, cfg: ModelConfig, kind: str, entry, pos):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if kind.startswith("attn"):
+        window = cfg.local_window if kind == "attn_local" else None
+        if cfg.use_mla:
+            h, new_entry = _decode_mla(h, p["attn"], cfg, entry, pos)
+        else:
+            h, new_entry = _decode_gqa(h, p["attn"], cfg, entry, pos, window)
+    elif kind == "ssm":
+        h, new_entry = _decode_ssm(h, p["mixer"], cfg, entry)
+    elif kind == "rec":
+        h, new_entry = _decode_rec(h, p["mixer"], cfg, entry)
+    if cfg.use_post_norm:
+        h = rmsnorm(h, p["post_ln1"], cfg.norm_eps)
+    x = x + h
+    if kind != "ssm":
+        h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if kind.endswith("_moe"):
+            h, _ = moe.moe_mlp(h, p["moe"], cfg)
+        else:
+            h = layers.mlp(h, p["mlp"], cfg)
+        if cfg.use_post_norm:
+            h = rmsnorm(h, p["post_ln2"], cfg.norm_eps)
+        x = x + h
+    return x, new_entry
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """One decode step.  tokens (B,) int32; pos () int32 — the absolute
+    position being generated.  Returns (logits (B, V), new_cache)."""
+    x = transformer.embed_tokens(params, cfg, tokens[:, None])
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + layers.sinusoidal_pos(
+            jnp.full((1,), pos, jnp.int32), cfg.d_model)[None].astype(x.dtype)
+    new_cache = {}
+    for si, (unit, n) in enumerate(cfg.stage_list()):
+
+        def unit_decode(x, scanned, unit=unit):
+            unit_params, unit_cache = scanned
+            entries = {}
+            for i, kind in enumerate(unit):
+                x, e = _block_decode(x, unit_params[f"b{i}"], cfg, kind,
+                                     unit_cache[f"b{i}"], pos)
+                entries[f"b{i}"] = e
+            return x, entries
+
+        x, stage_cache = jax.lax.scan(
+            unit_decode, x, (params[f"stage{si}"], cache[f"stage{si}"]))
+        new_cache[f"stage{si}"] = stage_cache
+    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = transformer.unembed(params, cfg, h[:, 0])
+    return logits, new_cache

@@ -1,0 +1,80 @@
+"""KV/state cache structures for every block kind in the zoo.
+
+Cache kinds:
+  * gqa  — full (L = max_len) or ring (L = window) k/v: (R, B, L, KV, hd)
+  * mla  — compressed latent (R, B, L, kvr) + shared rope-key (R, B, L, rd):
+           the deepseek trick, ~9x smaller than materialized K/V
+  * ssm  — constant-size SSD state (R, B, H, S, P) + conv tail
+  * rec  — constant-size LRU state (R, B, W) + conv tail
+Ring semantics: token at absolute position p lives in slot p % L; slot
+validity is recovered arithmetically from the scalar decode position, so no
+per-slot position array is stored.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def attn_cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if kind == "attn_local" and cfg.local_window:
+        return min(max_len, cfg.local_window)
+    return max_len
+
+
+def kv_slot_positions(pos: jax.Array, cache_len: int,
+                      is_ring: bool) -> jax.Array:
+    """Absolute position held by each slot once the token at `pos` is
+    written; invalid slots get -1 (blockwise_attention masks them)."""
+    idx = jnp.arange(cache_len, dtype=jnp.int32)
+    if not is_ring:
+        return jnp.where(idx <= pos, idx, -1)
+    p = pos - jnp.mod(pos - idx, cache_len)
+    return jnp.where(p >= 0, p, -1)
+
+
+def _conv_channels(cfg: ModelConfig, kind: str) -> int:
+    if kind == "ssm":
+        return cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return cfg.lru_width
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     n_rep: int, dtype) -> dict:
+    def z(*shape, dt=dtype):
+        return jnp.zeros((n_rep, batch) + shape, dt)
+
+    if kind.startswith("attn"):
+        length = attn_cache_len(cfg, kind, max_len)
+        if cfg.use_mla:
+            return {"latent": z(length, cfg.kv_lora_rank),
+                    "k_rope": z(length, cfg.qk_rope_dim)}
+        return {"k": z(length, cfg.n_kv_heads, cfg.head_dim),
+                "v": z(length, cfg.n_kv_heads, cfg.head_dim)}
+    if kind == "ssm":
+        return {"state": z(cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim,
+                           dt=jnp.float32),
+                "cx": z(cfg.conv_kernel - 1, cfg.d_inner),
+                "cb": z(cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state),
+                "cc": z(cfg.conv_kernel - 1, cfg.ssm_groups * cfg.ssm_state)}
+    if kind == "rec":
+        return {"lru": z(cfg.lru_width, dt=jnp.float32),
+                "conv": z(cfg.conv_kernel - 1, _conv_channels(cfg, kind))}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    cache: dict = {}
+    for si, (unit, n) in enumerate(cfg.stage_list()):
+        cache[f"stage{si}"] = {
+            f"b{i}": init_block_cache(cfg, kind, batch, max_len, n, dtype)
+            for i, kind in enumerate(unit)}
+    return cache
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

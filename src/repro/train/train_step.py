@@ -1,0 +1,113 @@
+"""Training step: microbatched grad accumulation + AdamW update.
+
+The microbatch loop is a lax.scan, which lets XLA overlap each microbatch's
+gradient reduce-scatter with the next microbatch's compute (the
+compute/comm-overlap trick from DESIGN.md §4).  Optional int8 error-feedback
+gradient compression sits between accumulation and the optimizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelBundle
+from repro.optim.adamw import AdamW, AdamWState
+from repro.optim import compression
+from repro.train.loss import chunked_softmax_xent
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    ef: Any                       # error-feedback residual or None
+    rng: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    n_microbatches: int = 1
+    loss_chunk: int = 512
+    mtp_coef: float = 0.3
+    compress_grads: bool = False
+
+
+def make_loss_fn(bundle: ModelBundle, ts_cfg: TrainStepConfig):
+    cfg = bundle.cfg
+
+    def loss_fn(params, batch):
+        h, aux = bundle.hidden_fn(params, batch)
+        tokens = batch["tokens"]
+        # VLM prefix positions carry no next-token loss; slice them off.
+        text_h = h[:, -tokens.shape[1]:]
+        loss = chunked_softmax_xent(
+            text_h[:, :-1], tokens[:, 1:],
+            lambda hh: bundle.logits_fn(params, hh),
+            mask=batch.get("loss_mask", None),
+            chunk=ts_cfg.loss_chunk)
+        if cfg.mtp_heads:
+            from repro.models import transformer
+            mtp_h = transformer.mtp_hidden(params, cfg, text_h, tokens)
+            # mtp_h[:, t] predicts token t+2
+            mtp_loss = chunked_softmax_xent(
+                mtp_h[:, :-1], tokens[:, 2:],
+                lambda hh: bundle.logits_fn(params, hh),
+                chunk=ts_cfg.loss_chunk)
+            loss = loss + ts_cfg.mtp_coef * mtp_loss
+        return loss + aux.astype(jnp.float32)
+
+    return loss_fn
+
+
+def make_train_step(bundle: ModelBundle, opt: AdamW,
+                    ts_cfg: TrainStepConfig = TrainStepConfig()):
+    loss_fn = make_loss_fn(bundle, ts_cfg)
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: dict):
+        n = ts_cfg.n_microbatches
+
+        if n > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = grad_fn(state.params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            def split(x):  # (B, ...) -> (n, B/n, ...)
+                return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(
+                micro, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            loss = lsum / n
+        else:
+            loss, grads = grad_fn(state.params, batch)
+
+        ef = state.ef
+        if ts_cfg.compress_grads and ef is not None:
+            grads, ef = compression.compress_grads(grads, ef)
+
+        new_params, new_opt, metrics = opt.update(grads, state.opt,
+                                                  state.params)
+        metrics["loss"] = loss
+        new_rng = jax.random.fold_in(state.rng, new_opt.step)
+        return TrainState(new_params, new_opt, ef, new_rng), metrics
+
+    return train_step
+
+
+def init_train_state(bundle: ModelBundle, opt: AdamW, key: jax.Array,
+                     ts_cfg: TrainStepConfig = TrainStepConfig()
+                     ) -> TrainState:
+    params = bundle.init(key)
+    ef = (compression.init_error_feedback(params)
+          if ts_cfg.compress_grads else None)
+    return TrainState(params=params, opt=opt.init(params), ef=ef, rng=key)

@@ -1,0 +1,145 @@
+"""Checkpoint/restart, elastic resharding, retry and straggler handling."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.distributed import sharding as shd
+from repro.distributed.fault_tolerance import (ElasticPlan, StepFailed,
+                                               StepGuard,
+                                               plan_elastic_restart,
+                                               retry_step)
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    out = mgr.restore(jax.tree.map(np.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_atomic_no_partial_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(7, _tree(), blocking=True)
+    names = os.listdir(tmp_path)
+    assert all(not n.startswith(".tmp") for n in names)
+    assert mgr.latest_step() == 7
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    bad = {"a": np.zeros((2, 2), np.float32),
+           "b": {"c": np.zeros((2,), np.float32)}}
+    with pytest.raises(ValueError, match="mismatch"):
+        mgr.restore(bad)
+
+
+def test_elastic_restore_to_new_mesh(tmp_path):
+    """Checkpoint saved from one mesh restores sharded onto another —
+    the elastic-restart path (mesh shapes differ, bytes identical)."""
+    n = jax.device_count()
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    mgr.save(3, tree, blocking=True)
+    mesh = jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    specs = {"w": jax.sharding.PartitionSpec(None, None)}
+    out = mgr.restore(tree, specs=specs, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+
+
+def test_retry_step_recovers():
+    calls = {"n": 0}
+
+    def flaky(state, batch):
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise StepFailed("injected")
+        return state + batch
+
+    out = retry_step(flaky, 1, 2, max_retries=3)
+    assert out == 3 and calls["n"] == 3
+
+
+def test_retry_step_exhausts():
+    def always_fails(state, batch):
+        raise StepFailed("boom")
+
+    with pytest.raises(StepFailed):
+        retry_step(always_fails, 0, 0, max_retries=1)
+
+
+def test_straggler_guard_flags_slow_step():
+    import time
+    guard = StepGuard(deadline_factor=5.0, min_history=3)
+    for _ in range(4):
+        _, s = guard.run(lambda: time.sleep(0.01))
+        assert not s
+    _, straggled = guard.run(lambda: time.sleep(0.3))
+    assert straggled
+
+
+def test_elastic_plan():
+    plan = plan_elastic_restart((16, 16), surviving_chips=192, model_axis=16)
+    assert plan.new_mesh == (12, 16) and plan.reshard
+    plan = plan_elastic_restart((16, 16), surviving_chips=256, model_axis=16)
+    assert plan.new_mesh == (16, 16) and not plan.reshard
+    with pytest.raises(ValueError):
+        plan_elastic_restart((16, 16), surviving_chips=8, model_axis=16)
+
+
+def test_trainer_resume_after_interrupt(tmp_path):
+    """End-to-end: train, 'crash', resume from checkpoint, losses continue."""
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataLoader, SyntheticLM
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import build_model
+    from repro.optim.adamw import AdamW
+    from repro.train.train_step import TrainStepConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("internvl2-1b").reduced()
+    import dataclasses
+    cfg = dataclasses.replace(cfg, frontend=None, family="dense")
+    bundle = build_model(cfg)
+    mesh = make_host_mesh()
+    tc = TrainerConfig(total_steps=6, ckpt_every=3, log_every=2,
+                       ckpt_dir=str(tmp_path))
+    trainer = Trainer(bundle, AdamW(lr=1e-3), mesh,
+                      TrainStepConfig(loss_chunk=16), tc,
+                      log_fn=lambda s: None)
+    loader = DataLoader(SyntheticLM(cfg.vocab_size), 2, 32, mesh=mesh)
+    try:
+        trainer.run(loader)
+        assert trainer.ckpt.latest_step() == 6
+        # simulate a crash + restart: new trainer instance, same dir
+        trainer2 = Trainer(bundle, AdamW(lr=1e-3), mesh,
+                           TrainStepConfig(loss_chunk=16),
+                           TrainerConfig(total_steps=8, ckpt_every=4,
+                                         ckpt_dir=str(tmp_path)),
+                           log_fn=lambda s: None)
+        start = trainer2.maybe_restore()
+        assert start == 6
+        assert int(trainer2.state.opt.step) == 6
+    finally:
+        loader.close()

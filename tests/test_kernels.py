@@ -1,0 +1,159 @@
+"""Per-kernel allclose tests vs the pure-jnp oracles (interpret mode on CPU).
+
+Shape/dtype sweeps per the brief; hypothesis property tests live in
+tests/test_properties.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.costmodel import BlockPlan
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------- skew matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn", [
+    (128, 256, 128),     # aligned square
+    (100, 200, 300),     # unaligned everything
+    (8, 512, 1024),      # decode-style GEMV batch
+    (1, 384, 1000),      # extreme right-skew (vocab-sliver)
+    (700, 64, 7),        # extreme left-skew, tiny n
+    (256, 2048, 512),    # contraction-heavy (paper right-skew of A)
+])
+def test_skew_matmul_matches_oracle(mkn, dtype):
+    m, k, n = mkn
+    a, b = _arr((m, k), dtype, 0.3), _arr((k, n), dtype, 0.3)
+    got = ops.skew_matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    assert got.dtype == want.dtype and got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_skew_matmul_explicit_plan():
+    a, b = _arr((256, 512)), _arr((512, 384))
+    got = ops.skew_matmul(a, b, plan=BlockPlan(bm=64, bk=128, bn=128))
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=2e-3, atol=1e-4)
+
+
+def test_skew_matmul_out_dtype():
+    a, b = _arr((64, 128), jnp.bfloat16), _arr((128, 64), jnp.bfloat16)
+    got = ops.skew_matmul(a, b, out_dtype=jnp.float32)
+    assert got.dtype == jnp.float32
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("kw", [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=64),
+    dict(causal=True, window=100),          # non-block-aligned window
+    dict(causal=True, softcap=30.0),        # gemma2 logit soft-cap
+    dict(causal=True, window=128, softcap=50.0),
+])
+def test_flash_attention_matches_oracle(kw, dtype):
+    q = _arr((2, 4, 256, 64), dtype, 0.3)
+    k = _arr((2, 2, 256, 64), dtype, 0.3)   # GQA group=2
+    v = _arr((2, 2, 256, 64), dtype)
+    got = ops.flash_attention(q, k, v, bq=64, bkv=64, **kw)
+    want = ref.attention_ref(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("heads", [(8, 1), (8, 8), (6, 2)])
+def test_flash_attention_gqa_groups(heads):
+    hq, hkv = heads
+    q = _arr((1, hq, 128, 32), scale=0.3)
+    k = _arr((1, hkv, 128, 32), scale=0.3)
+    v = _arr((1, hkv, 128, 32))
+    got = ops.flash_attention(q, k, v, bq=64, bkv=64)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+
+def test_flash_attention_block_shapes_sweep():
+    q = _arr((1, 2, 256, 64), scale=0.3)
+    k = _arr((1, 2, 256, 64), scale=0.3)
+    v = _arr((1, 2, 256, 64))
+    want = ref.attention_ref(q, k, v, causal=True, window=96)
+    for bq, bkv in [(32, 32), (64, 128), (128, 64), (256, 256)]:
+        got = ops.flash_attention(q, k, v, bq=bq, bkv=bkv, causal=True,
+                                  window=96)
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4,
+                                   err_msg=f"bq={bq} bkv={bkv}")
+
+
+# -------------------------------------------------------------------- SSD
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("chunk", [32, 64, 128])
+def test_ssd_scan_matches_oracle(chunk, dtype):
+    B, L, H, P, G, S = 2, 256, 4, 64, 2, 32
+    x = _arr((B, L, H, P), dtype)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(B, L, H)), dtype)
+    a_log = jnp.asarray(RNG.uniform(-0.5, 1.0, size=(H,)), jnp.float32)
+    bm = _arr((B, L, G, S), dtype, 0.5)
+    cm = _arr((B, L, G, S), dtype, 0.5)
+    got = ops.ssd_scan(x, dt, a_log, bm, cm, chunk=chunk)
+    want = ref.ssd_ref(x, dt, a_log, bm, cm)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+def test_ssd_scan_mqa_style_groups():
+    # G=1 (all heads share B/C), mamba2 default
+    B, L, H, P, G, S = 1, 128, 8, 32, 1, 16
+    x = _arr((B, L, H, P))
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, size=(B, L, H)), jnp.float32)
+    a_log = jnp.asarray(RNG.uniform(-0.5, 0.5, size=(H,)), jnp.float32)
+    bm, cm = _arr((B, L, G, S), scale=0.5), _arr((B, L, G, S), scale=0.5)
+    got = ops.ssd_scan(x, dt, a_log, bm, cm, chunk=64)
+    want = ref.ssd_ref(x, dt, a_log, bm, cm)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# -------------------------------------------------------------------- RG-LRU
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("chunk", [32, 64, 256])
+def test_rglru_scan_matches_oracle(chunk, dtype):
+    B, L, D = 2, 256, 32
+    x = _arr((B, L, D), dtype)
+    r = _arr((B, L, D), dtype)
+    i = _arr((B, L, D), dtype)
+    lam = jnp.asarray(RNG.uniform(-2, 2, size=(D,)), jnp.float32)
+    got = ops.rglru_scan(x, r, i, lam, chunk=chunk)
+    want = ref.rglru_ref(x, r, i, lam)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               atol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_rglru_strong_decay_stability():
+    """The regime that breaks the naive exp-prefix formulation."""
+    B, L, D = 1, 128, 16
+    x = _arr((B, L, D))
+    r = jnp.full((B, L, D), 5.0)            # sigmoid ~ 1: max decay
+    i = _arr((B, L, D))
+    lam = jnp.full((D,), 4.0)               # softplus(4) ~ 4: a ~ e^-32
+    got = ops.rglru_scan(x, r, i, lam, chunk=64)
+    want = ref.rglru_ref(x, r, i, lam)
+    assert not np.any(np.isnan(np.asarray(got)))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-5)

@@ -1,0 +1,144 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hw
+from repro.core.planner import plan_matmul
+from repro.kernels import ops, ref
+from repro.models import layers
+from repro.optim import compression
+
+SET = settings(max_examples=25, deadline=None)
+
+dims = st.integers(min_value=1, max_value=4096)
+
+
+@SET
+@given(m=dims, k=dims, n=dims,
+       amp=st.floats(min_value=0.05, max_value=0.95))
+def test_planner_always_returns_valid_plan(m, k, n, amp):
+    c = plan_matmul(m, k, n, amp=amp)
+    d = c.dims
+    gm, gn, gk = c.plan.grid(d)
+    # full coverage
+    assert gm * c.plan.bm >= m and gn * c.plan.bn >= n and gk * c.plan.bk >= k
+    # costs are positive and finite
+    assert 0 < c.total_s < float("inf")
+    # fraction can never exceed 1
+    assert c.roofline_fraction(hw.TPU_V5E) <= 1.0 + 1e-9
+
+
+@SET
+@given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300),
+       seed=st.integers(0, 2 ** 16))
+def test_skew_matmul_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)) * 0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)) * 0.5, jnp.float32)
+    got = ops.skew_matmul(a, b)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b),
+                               rtol=5e-3, atol=5e-4)
+
+
+@SET
+@given(b=st.integers(1, 3), s=st.sampled_from([17, 64, 130]),
+       d=st.sampled_from([8, 32]), seed=st.integers(0, 2 ** 16))
+def test_rmsnorm_scale_invariant_direction(b, s, d, seed):
+    """rmsnorm(c*x) == rmsnorm(x) for any positive scalar c (fp32)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, s, d)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(d,)) * 0.1, jnp.float32)
+    y1 = layers.rmsnorm(x, w)
+    y2 = layers.rmsnorm(3.7 * x, w)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+@SET
+@given(s=st.integers(2, 64), d=st.sampled_from([16, 64]),
+       theta=st.sampled_from([1e4, 5e5]), seed=st.integers(0, 2 ** 16))
+def test_rope_preserves_norm_and_relativity(s, d, theta, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1, s, 1, d)), jnp.float32)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    cos, sin = layers.rope_freqs(pos, d, theta)
+    y = layers.apply_rope(x, cos, sin)
+    # rotation preserves per-vector norms
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1),
+                               rtol=1e-4, atol=1e-5)
+    # dot(q_i, k_j) depends only on i - j: shift both by 1
+    q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+
+    def rot(v, p):
+        c, s_ = layers.rope_freqs(jnp.asarray([p], jnp.int32), d, theta)
+        return layers.apply_rope(v[None, None, None, :], c, s_)[0, 0, 0]
+
+    d1 = jnp.dot(rot(q, 5), rot(k, 3))
+    d2 = jnp.dot(rot(q, 9), rot(k, 7))
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)
+
+
+@SET
+@given(sq=st.sampled_from([33, 64, 127]), skv=st.sampled_from([64, 128]),
+       window=st.one_of(st.none(), st.integers(4, 64)),
+       seed=st.integers(0, 2 ** 16))
+def test_blockwise_attention_property(sq, skv, window, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 2, sq, 16)) * 0.4, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, sq, 16)) * 0.4, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 1, sq, 16)), jnp.float32)
+    got = layers.blockwise_attention(q, k, v, causal=True, window=window,
+                                     q_chunk=32, kv_chunk=48)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-4)
+
+
+@SET
+@given(n=st.integers(1, 2048), seed=st.integers(0, 2 ** 16),
+       scale=st.floats(1e-6, 1e3))
+def test_quantize_error_bounded_by_half_step(n, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale, jnp.float32)
+    q, s = compression.quantize(x)
+    err = jnp.max(jnp.abs(compression.dequantize(q, s) - x))
+    assert float(err) <= float(s) * 0.5 + 1e-12
+
+
+@SET
+@given(seed=st.integers(0, 2 ** 16), steps=st.integers(1, 8))
+def test_error_feedback_residual_bounded(seed, steps):
+    rng = np.random.default_rng(seed)
+    g0 = {"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+    ef = compression.init_error_feedback(g0)
+    for _ in range(steps):
+        g = {"w": jnp.asarray(rng.normal(size=(32,)), jnp.float32)}
+        _, ef = compression.compress_grads(g, ef)
+        # residual can never exceed one quantization step of the carried sum
+        assert float(jnp.max(jnp.abs(ef.residual["w"]))) < 1.0
+
+
+@SET
+@given(b=st.integers(1, 2), length=st.sampled_from([32, 96]),
+       seed=st.integers(0, 2 ** 16))
+def test_ssd_state_decomposition(b, length, seed):
+    """SSD over [x1; x2] == SSD(x2) seeded with state(x1) — the chunked
+    algorithm's core invariant."""
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(seed)
+    H, P, G, S = 2, 8, 1, 4
+    half = length // 2
+    x = jnp.asarray(rng.normal(size=(b, length, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.1, (b, length, H)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-0.5, 0.5, (H,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, length, G, S)) * 0.5, jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, length, G, S)) * 0.5, jnp.float32)
+    y_full = ssd_chunked(x, dt, a_log, bm, cm, chunk=16)
+    _, st1 = ssd_chunked(x[:, :half], dt[:, :half], a_log, bm[:, :half],
+                         cm[:, :half], chunk=16, return_state=True)
+    y2 = ssd_chunked(x[:, half:], dt[:, half:], a_log, bm[:, half:],
+                     cm[:, half:], chunk=16, init_state=st1)
+    np.testing.assert_allclose(y2, y_full[:, half:], rtol=2e-3, atol=2e-3)

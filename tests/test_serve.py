@@ -1,0 +1,115 @@
+"""Serving correctness: prefill/decode must match the full forward exactly
+(capacity set drop-free for MoE so the comparison is well-defined)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import all_arch_ids, get_config
+from repro.models.model import build_model
+from repro.serve import encdec_engine, engine, kvcache
+
+RNG = np.random.default_rng(13)
+DECODER_ARCHS = [a for a in all_arch_ids()
+                 if get_config(a).family != "encdec"]
+
+
+def _nodrop(cfg):
+    if cfg.n_experts:
+        return dataclasses.replace(cfg,
+                                   capacity_factor=float(cfg.n_experts))
+    return cfg
+
+
+@pytest.mark.parametrize("arch", DECODER_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    cfg = _nodrop(get_config(arch).reduced())
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(1))
+    B, S, MAX = 2, 48, 80   # MAX covers S + VLM prefix + decode steps
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S + 2)),
+                       jnp.int32)
+    batch = {"tokens": toks}
+    pe = None
+    if cfg.family == "vlm":
+        pe = jnp.asarray(RNG.normal(size=(B, cfg.frontend_len, cfg.d_model))
+                         * 0.1, jnp.float32)
+        batch["prefix_embeds"] = pe
+    h, _ = bundle.hidden_fn(params, batch)
+    offset = cfg.frontend_len if cfg.family == "vlm" else 0
+
+    cache, logits = engine.prefill(params, cfg, toks[:, :S], max_len=MAX,
+                                   prefix_embeds=pe)
+    np.testing.assert_allclose(logits, bundle.logits_fn(params, h[:, -3]),
+                               rtol=2e-3, atol=2e-3)
+    for i, col in enumerate((S, S + 1)):
+        logits, cache = engine.decode_step(
+            params, cfg, cache, toks[:, col],
+            jnp.asarray(col + offset, jnp.int32))
+        want = bundle.logits_fn(params, h[:, -(2 - i)])
+        np.testing.assert_allclose(logits, want, rtol=2e-3, atol=2e-3)
+
+
+def test_encdec_prefill_decode():
+    cfg = get_config("seamless-m4t-large-v2").reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(1))
+    B, S, F, MAX = 2, 24, 16, 32
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S + 1)),
+                       jnp.int32)
+    frames = jnp.asarray(RNG.normal(size=(B, F, cfg.d_model)) * 0.1,
+                         jnp.float32)
+    h, _ = bundle.hidden_fn(params, {"tokens": toks, "frames": frames})
+    cache, logits = encdec_engine.prefill(params, cfg, frames, toks[:, :S],
+                                          max_len=MAX)
+    np.testing.assert_allclose(logits, bundle.logits_fn(params, h[:, -2]),
+                               rtol=2e-3, atol=2e-3)
+    logits, _ = encdec_engine.decode_step(params, cfg, cache, toks[:, S],
+                                          jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(logits, bundle.logits_fn(params, h[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ring_cache_matches_full_for_local_attention():
+    """Local-attention ring cache (window-sized) must equal a full cache."""
+    cfg = get_config("recurrentgemma-9b").reduced()  # window 64 -> ring
+    assert cfg.local_window is not None
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(2))
+    B = 1
+    S = cfg.local_window + 24            # prompt longer than the window
+    toks = jnp.asarray(RNG.integers(0, cfg.vocab_size, (B, S + 1)),
+                       jnp.int32)
+    h, _ = bundle.hidden_fn(params, {"tokens": toks})
+    cache, _ = engine.prefill(params, cfg, toks[:, :S], max_len=S + 8)
+    logits, _ = engine.decode_step(params, cfg, cache, toks[:, S],
+                                   jnp.asarray(S, jnp.int32))
+    np.testing.assert_allclose(logits, bundle.logits_fn(params, h[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv_slot_positions():
+    # full cache
+    pos = kvcache.kv_slot_positions(jnp.asarray(5), 8, False)
+    np.testing.assert_array_equal(np.asarray(pos),
+                                  [0, 1, 2, 3, 4, 5, -1, -1])
+    # ring cache of 4 at pos 5: slots hold 4, 5, 2, 3
+    pos = kvcache.kv_slot_positions(jnp.asarray(5), 4, True)
+    np.testing.assert_array_equal(np.asarray(pos), [4, 5, 2, 3])
+    # ring not yet wrapped
+    pos = kvcache.kv_slot_positions(jnp.asarray(1), 4, True)
+    np.testing.assert_array_equal(np.asarray(pos), [0, 1, -1, -1])
+
+
+def test_mla_cache_is_compressed():
+    """MLA cache must be ~(kvr+rd)/(2*H*hd) of the GQA-equivalent size."""
+    cfg = get_config("deepseek-v3-671b")
+    cache = jax.eval_shape(lambda: kvcache.init_cache(cfg, 1, 1024))
+    total = sum(np.prod(s.shape) * s.dtype.itemsize
+                for s in jax.tree.leaves(cache))
+    gqa_equiv = (cfg.n_layers * 1024 *
+                 2 * cfg.n_heads * cfg.head_dim * 2)  # bf16 k+v
+    assert total < 0.05 * gqa_equiv

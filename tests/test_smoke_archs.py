@@ -1,0 +1,81 @@
+"""Per-architecture smoke tests (reduced configs, mandated by the brief):
+instantiate, one forward + one train step on CPU, assert shapes + no NaNs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import all_arch_ids, get_config
+from repro.models.model import build_model, count_params
+from repro.optim.adamw import AdamW
+from repro.train.train_step import (TrainStepConfig, init_train_state,
+                                    make_train_step)
+
+RNG = np.random.default_rng(11)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {"tokens": jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.asarray(
+            RNG.normal(size=(b, cfg.frontend_len, cfg.d_model)) * 0.1,
+            jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            RNG.normal(size=(b, cfg.frontend_len, cfg.d_model)) * 0.1,
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    assert count_params(params) > 0
+    b, s = 2, 32
+    batch = _batch(cfg, b, s)
+    h, aux = bundle.hidden_fn(params, batch)
+    logits = bundle.logits_fn(params, h)
+    extra = cfg.frontend_len if cfg.family == "vlm" else 0
+    assert h.shape == (b, s + extra, cfg.d_model)
+    assert logits.shape == (b, s + extra, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", all_arch_ids())
+def test_one_train_step_no_nans(arch):
+    cfg = get_config(arch).reduced()
+    bundle = build_model(cfg)
+    opt = AdamW(lr=1e-3)
+    ts_cfg = TrainStepConfig(n_microbatches=1, loss_chunk=16)
+    state = init_train_state(bundle, opt, jax.random.PRNGKey(0), ts_cfg)
+    step = jax.jit(make_train_step(bundle, opt, ts_cfg))
+    state, metrics = step(state, _batch(cfg))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+def test_full_configs_match_published_param_counts():
+    """Full-size configs (eval_shape only, no allocation)."""
+    from repro.models.model import count_params_active
+    expect = {  # published totals, tolerance 6%
+        "mamba2-2.7b": 2.7e9, "phi4-mini-3.8b": 3.8e9,
+        "granite-34b": 34e9, "gemma2-27b": 27.2e9,
+        "dbrx-132b": 132e9, "deepseek-v3-671b": 671e9,
+        "internvl2-1b": 0.49e9, "recurrentgemma-9b": 9.0e9,
+    }
+    for arch, want in expect.items():
+        total, _ = count_params_active(get_config(arch))
+        assert abs(total - want) / want < 0.06, (arch, total, want)
+
+
+def test_moe_active_params():
+    from repro.models.model import count_params_active
+    total, active = count_params_active(get_config("deepseek-v3-671b"))
+    assert active < 40e9 and total > 600e9

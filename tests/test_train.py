@@ -1,0 +1,125 @@
+"""Training substrate: loss chunking, microbatch equivalence, AdamW,
+gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.model import build_model
+from repro.optim import compression
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine
+from repro.train.loss import chunked_softmax_xent
+from repro.train.train_step import (TrainStepConfig, init_train_state,
+                                    make_train_step)
+
+RNG = np.random.default_rng(17)
+
+
+def test_chunked_xent_matches_full():
+    B, S, D, V = 2, 48, 16, 100
+    h = jnp.asarray(RNG.normal(size=(B, S, D)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(D, V)), jnp.float32)
+    t = jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32)
+    full_logits = h @ w
+    logz = jax.scipy.special.logsumexp(full_logits, -1)
+    gold = jnp.take_along_axis(full_logits, t[..., None], -1)[..., 0]
+    want = jnp.mean(logz - gold)
+    for chunk in (7, 16, 48, 512):
+        got = chunked_softmax_xent(h, t, lambda x: x @ w, chunk=chunk)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_chunked_xent_grad_matches_full():
+    B, S, D, V = 2, 32, 8, 64
+    h = jnp.asarray(RNG.normal(size=(B, S, D)), jnp.float32)
+    w = jnp.asarray(RNG.normal(size=(D, V)), jnp.float32)
+    t = jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32)
+
+    def full(w):
+        logits = h @ w
+        logz = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, t[..., None], -1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    def chunked(w):
+        return chunked_softmax_xent(h, t, lambda x: x @ w, chunk=8)
+
+    np.testing.assert_allclose(jax.grad(full)(w), jax.grad(chunked)(w),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_microbatch_equivalence():
+    """n_microbatches must not change the update (same total gradient)."""
+    cfg = get_config("phi4-mini-3.8b").reduced()
+    bundle = build_model(cfg)
+    opt = AdamW(lr=1e-3, grad_clip=0.0)
+    batch = {"tokens": jnp.asarray(
+        RNG.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)}
+    results = []
+    for n in (1, 2, 4):
+        ts_cfg = TrainStepConfig(n_microbatches=n, loss_chunk=16)
+        state = init_train_state(bundle, opt, jax.random.PRNGKey(3), ts_cfg)
+        step = jax.jit(make_train_step(bundle, opt, ts_cfg))
+        new_state, m = step(state, batch)
+        results.append((float(m["loss"]),
+                        np.asarray(jax.tree.leaves(new_state.params)[0],
+                                   np.float32)))
+    for loss, p in results[1:]:
+        np.testing.assert_allclose(loss, results[0][0], rtol=1e-5)
+        np.testing.assert_allclose(p, results[0][1], rtol=2e-2, atol=2e-5)
+
+
+def test_adamw_against_reference():
+    """One AdamW step vs a hand-rolled numpy reference."""
+    opt = AdamW(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                grad_clip=0.0)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0], jnp.float32)}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3], jnp.float32)}
+    state = opt.init(p)
+    new_p, state, _ = opt.update(g, state, p)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.01 * np.asarray(g["w"]) ** 2
+    mhat, vhat = m / (1 - 0.9), v / (1 - 0.99)
+    want = np.asarray(p["w"]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(new_p["w"], want, rtol=1e-6)
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=1.0, grad_clip=1.0)
+    p = {"w": jnp.zeros((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 100.0)}
+    state = opt.init(p)
+    _, _, metrics = opt.update(g, state, p)
+    assert float(metrics["grad_norm"]) == 200.0  # pre-clip norm reported
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1.0, 10, 100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(lr(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(lr(jnp.asarray(100))) <= 0.11
+
+
+def test_compression_error_feedback_preserves_sum():
+    """Across steps, dequantized grads + residual == true grads exactly."""
+    g = {"w": jnp.asarray(RNG.normal(size=(64,)) * 1e-3, jnp.float32)}
+    ef = compression.init_error_feedback(g)
+    total_true = np.zeros(64, np.float32)
+    total_sent = np.zeros(64, np.float32)
+    for i in range(10):
+        gi = {"w": jnp.asarray(RNG.normal(size=(64,)) * 1e-3, jnp.float32)}
+        total_true += np.asarray(gi["w"])
+        deq, ef = compression.compress_grads(gi, ef)
+        total_sent += np.asarray(deq["w"])
+    # residual bounds the drift
+    drift = np.abs(total_sent + np.asarray(ef.residual["w"]) - total_true)
+    assert drift.max() < 1e-6
+
+
+def test_quantize_int8_roundtrip_error():
+    x = jnp.asarray(RNG.normal(size=(1000,)), jnp.float32)
+    q, s = compression.quantize(x)
+    err = jnp.abs(compression.dequantize(q, s) - x)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-9
