@@ -62,20 +62,30 @@ def fig4_squared_mm():
 
 # ----------------------------------------------------------- paper Fig. 5
 def fig5_skewed_mm():
-    """Skew sweep at constant A size (paper semantics: A's aspect varied)."""
+    """Skew sweeps: the paper's (A's aspect varied at constant A size) plus
+    the beyond-paper output-aspect family (the LM-head / decode shape class).
+
+    Each row reports naive vs single-schedule (K-inner-only, the pre-family
+    planner) vs schedule-diverse planned roofline fractions and the chosen
+    schedule, so the planned-vs-naive and the schedule-diversity gaps are
+    both visible.
+    """
     ratios = [2.0 ** i for i in range(-8, 9, 2)]
-    rows = sweep_aspect_ratios(4096 * 4096, ratios)
-    for r in rows:
-        m, k = r["m"], r["k"]
-        us = float("nan")
-        if m * k <= 2048 * 2048 * 4:
-            a = jnp.ones((m, k), jnp.float32)
-            b = jnp.ones((k, r["n"]), jnp.float32)
-            us = _time_call(jax.jit(lambda x, y: skewmm.matmul(x, y)), a, b)
-        _row(f"fig5_skew_{r['ratio']:g}", us,
-             f"planned_frac={r['planned_fraction']:.3f};"
-             f"naive_frac={r['naive_fraction']:.3f};"
-             f"plan={r['plan']}")
+    for vary, tag in (("a_aspect", "skew"), ("output", "oskew")):
+        rows = sweep_aspect_ratios(4096 * 4096, ratios, vary=vary)
+        for r in rows:
+            m, k = r["m"], r["k"]
+            us = float("nan")
+            if vary == "a_aspect" and m * k <= 2048 * 2048 * 4:
+                a = jnp.ones((m, k), jnp.float32)
+                b = jnp.ones((k, r["n"]), jnp.float32)
+                us = _time_call(jax.jit(lambda x, y: skewmm.matmul(x, y)),
+                                a, b)
+            _row(f"fig5_{tag}_{r['ratio']:g}", us,
+                 f"planned_frac={r['planned_fraction']:.3f};"
+                 f"single_frac={r['single_fraction']:.3f};"
+                 f"naive_frac={r['naive_fraction']:.3f};"
+                 f"schedule={r['schedule']};plan={r['plan']}")
 
 
 # ------------------------------------------------------------- §5.1 table
@@ -119,23 +129,25 @@ def tab_lm_matmul_census():
         cfg = get_config(arch).reduced()
         bundle = build_model(cfg)
         params = bundle.init(jax.random.PRNGKey(0))
-        skewmm.enable_plan_log(True)
         batch = {"tokens": jnp.zeros((2, 32), jnp.int32)}
         if cfg.family == "vlm":
             batch["prefix_embeds"] = jnp.zeros(
                 (2, cfg.frontend_len, cfg.d_model), jnp.float32)
-        h, _ = bundle.hidden_fn(params, batch)
-        bundle.logits_fn(params, h)
-        log = skewmm.plan_log()
-        skewmm.enable_plan_log(False)
+        with skewmm.plan_capture() as log:
+            h, _ = bundle.hidden_fn(params, batch)
+            bundle.logits_fn(params, h)
         n_left = sum(1 for c in log if c.dims.skew > 1)
         n_right = sum(1 for c in log if c.dims.skew < -1)
         n_sq = len(log) - n_left - n_right
         worst = min((c.roofline_fraction(hw.TPU_V5E) for c in log),
                     default=0.0)
+        scheds = {}
+        for c in log:
+            scheds[c.plan.schedule] = scheds.get(c.plan.schedule, 0) + 1
+        sched_str = "/".join(f"{s}:{n}" for s, n in sorted(scheds.items()))
         _row(f"census_{arch}", 0.0,
              f"matmuls={len(log)};left={n_left};square={n_sq};"
-             f"right={n_right};worst_frac={worst:.3f}")
+             f"right={n_right};worst_frac={worst:.3f};scheds={sched_str}")
 
 
 # ------------------------------------------------------- system benches

@@ -1,0 +1,37 @@
+"""Small JAX version-compat shims.
+
+The repo targets current JAX but must degrade gracefully on older releases
+(the CI image pins one).  Kernels carry their own CompilerParams alias; this
+module holds the shared mesh helper.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+
+def axis_size(axis_name: str) -> int:
+    """jax.lax.axis_size, with the classic psum-of-1 idiom as fallback.
+
+    `lax.psum(1, axis)` constant-folds to the concrete axis size on releases
+    that predate `lax.axis_size`, so both paths return a static int.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """jax.make_mesh with explicitly-Auto axis types where supported.
+
+    Newer JAX grew an `axis_types` kwarg (default Auto); older releases
+    don't accept it.  All our meshes are Auto, so both spellings agree.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)

@@ -8,9 +8,30 @@ budget (AMP knob).  We model exactly those effects for TPU:
   time(plan) = max(compute_term, memory_term) + grid_overhead_term
 
   compute_term  — MAC throughput over *padded* block volumes (MXU granularity)
-  memory_term   — HBM traffic implied by the block re-visit pattern
+  memory_term   — HBM traffic implied by the block re-visit pattern, which is
+                  now *schedule-dependent*: the grid loop order decides which
+                  operand is re-streamed how many times (see SCHEDULES)
   grid_overhead — per-grid-step cost; blows up for pathological plans, which is
                   the TPU analogue of the paper's right-skew vertex explosion.
+
+Schedules (the loop-order family `kernels.skew_matmul` implements):
+
+  "k_inner"    — grid (m, n, k), K innermost, output-stationary fp32
+                 accumulator.  A re-streamed per n-block (x gn), B per m-block
+                 (x gm), C written once.  The classic safe choice.
+  "a_resident" — grid (m, k, n), N innermost.  Each A block stays pinned in
+                 VMEM across the whole n sweep, so A is streamed exactly once;
+                 B per m-block; C is revisited per k-block (read+write at
+                 accumulator width when gk > 1).  Wins for right-skewed
+                 (m << n) shapes, where re-streaming A per n-block is the
+                 dominant waste (the LM-head / vocab-projection shape class).
+  "b_resident" — grid (n, k, m), M innermost; mirror image of "a_resident".
+                 B streamed once, A per n-block, C revisited per k-block.
+                 Wins for left-skewed (m >> n) shapes.
+
+A plan may additionally put a leading batch dimension in the grid
+(`batch_grid=True`) instead of folding it into m — worthwhile when folding
+would straddle batch boundaries with a badly padded bm.
 
 All quantities are derived with napkin-math-auditable formulas so that the
 planner's choices can be inspected (see `MatmulCost.explain()`).
@@ -23,6 +44,8 @@ import math
 
 from repro.core import hw
 
+SCHEDULES = ("k_inner", "a_resident", "b_resident")
+
 
 def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
@@ -34,51 +57,76 @@ def _round_up(a: int, b: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class MatmulDims:
-    """Problem A[m, k] @ B[k, n] = C[m, n] (paper notation: A[m,n] x B[n,k])."""
+    """Problem A[batch, m, k] @ B[k, n] = C[batch, m, n].
+
+    (paper notation: A[m,n] x B[n,k]; batch defaults to 1 = the plain 2-D
+    case.  batch > 1 models a shared-weight bmm whose leading dim either
+    folds into m or rides in the grid, depending on the plan.)
+    """
 
     m: int
     k: int
     n: int
     dtype_bytes: int = 2          # operand/output element width
     acc_bytes: int = 4            # accumulator width (fp32 accumulation)
+    batch: int = 1
 
     @property
     def flops(self) -> int:
-        return 2 * self.m * self.k * self.n
+        return 2 * self.batch * self.m * self.k * self.n
 
     @property
     def skew(self) -> float:
-        """Paper-style skew: log2(m/n). <0 right-skewed, >0 left-skewed."""
-        return math.log2(self.m / self.n)
+        """Paper-style skew: log2(rows/n). <0 right-skewed, >0 left-skewed.
+
+        Rows include the batch dim — the shape class of the contraction is
+        the same whether the batch folds into m or rides in the grid.
+        """
+        return math.log2(self.batch * self.m / self.n)
 
 
 @dataclasses.dataclass(frozen=True)
 class BlockPlan:
-    """A work-decomposition plan: VMEM-resident block shape per grid step."""
+    """A work-decomposition plan: block shape + grid loop order (schedule).
+
+    `schedule` is one of SCHEDULES and decides the traffic pattern (which
+    operand is re-streamed) as well as the kernel loop order.  `batch_grid`
+    puts a leading batch dim in the grid instead of folding it into m.
+    """
 
     bm: int
     bk: int
     bn: int
+    schedule: str = "k_inner"
+    batch_grid: bool = False
 
     def grid(self, d: MatmulDims) -> tuple[int, int, int]:
-        return (_ceil_div(d.m, self.bm), _ceil_div(d.n, self.bn),
+        m = d.m if self.batch_grid else d.m * d.batch
+        return (_ceil_div(m, self.bm), _ceil_div(d.n, self.bn),
                 _ceil_div(d.k, self.bk))
 
     def grid_steps(self, d: MatmulDims) -> int:
         gm, gn, gk = self.grid(d)
-        return gm * gn * gk
+        steps = gm * gn * gk
+        return steps * d.batch if self.batch_grid else steps
 
     def vmem_bytes(self, d: MatmulDims) -> int:
-        """Working set per grid step, with double-buffered inputs.
+        """Working set per grid step, with double-buffered streamed blocks.
 
-        A-block + B-block are double-buffered for the HBM->VMEM pipeline; the
-        C accumulator persists in VMEM across the K grid dimension at
-        accumulator precision.  This is the TPU translation of the paper's
-        "all operands must fit In-Processor memory".
+        This is the TPU translation of the paper's "all operands must fit
+        In-Processor memory".  k_inner holds the C block as an fp32 VMEM
+        scratch accumulator; the resident schedules accumulate through the
+        revisited output block itself (fp32-wide while gk > 1, output width
+        when the contraction fits a single k block).
         """
+        gk = _ceil_div(d.k, self.bk)
         a = self.bm * self.bk * d.dtype_bytes
         b = self.bk * self.bn * d.dtype_bytes
-        c = self.bm * self.bn * d.acc_bytes
+        if self.schedule == "k_inner":
+            c = self.bm * self.bn * d.acc_bytes
+        else:
+            c_width = d.acc_bytes if gk > 1 else d.dtype_bytes
+            c = 2 * self.bm * self.bn * c_width
         return 2 * (a + b) + c
 
 
@@ -113,8 +161,11 @@ class MatmulCost:
 
     def explain(self) -> str:
         d, p = self.dims, self.plan
+        batch = f" batch={d.batch}{'(grid)' if p.batch_grid else '(fold)'}" \
+            if d.batch > 1 else ""
         return (
-            f"mm {d.m}x{d.k}x{d.n} plan ({p.bm},{p.bk},{p.bn}) "
+            f"mm {d.m}x{d.k}x{d.n}{batch} plan ({p.bm},{p.bk},{p.bn}) "
+            f"sched={p.schedule} "
             f"grid={self.grid_steps} vmem={self.vmem_bytes / 2**20:.2f}MiB "
             f"compute={self.compute_s * 1e6:.1f}us memory={self.memory_s * 1e6:.1f}us "
             f"overhead={self.overhead_s * 1e6:.1f}us bound={self.bound} "
@@ -122,17 +173,54 @@ class MatmulCost:
         )
 
 
+def _schedule_traffic(d: MatmulDims, p: BlockPlan,
+                      gm: int, gn: int, gk: int) -> int:
+    """HBM bytes implied by the schedule's block re-visit pattern.
+
+    Per-operand revisit counts (nb = batch copies sharing B):
+
+      k_inner:    A x gn,  B x gm*nb,  C written once at output width.
+      a_resident: A x 1,   B x gm*nb,  C revisited gk times (fp32
+                  read-modify-write; single output-width write when gk == 1).
+      b_resident: A x gn,  B x 1,      C as in a_resident.
+    """
+    nb = d.batch
+    a_elems = nb * d.m * d.k
+    b_elems = d.k * d.n
+    c_elems = nb * d.m * d.n
+    dt = d.dtype_bytes
+    if p.schedule == "a_resident":
+        a_bytes = a_elems * dt
+        b_bytes = b_elems * gm * nb * dt
+    elif p.schedule == "b_resident":
+        a_bytes = a_elems * gn * dt
+        b_bytes = b_elems * dt
+    else:  # k_inner
+        a_bytes = a_elems * gn * dt
+        b_bytes = b_elems * gm * nb * dt
+    if p.schedule == "k_inner" or gk == 1:
+        c_bytes = c_elems * dt
+    else:
+        # first visit writes, each later visit reads + writes, all fp32-wide
+        # ((2*gk - 1) acc-width passes), plus the cast back to output width
+        # outside the kernel: one fp32 read + one output-width write.
+        c_bytes = 2 * gk * c_elems * d.acc_bytes + c_elems * dt
+    return a_bytes + b_bytes + c_bytes
+
+
 def cost_matmul(d: MatmulDims, p: BlockPlan,
                 chip: hw.ChipSpec = hw.TPU_V5E) -> MatmulCost:
     """Evaluate a block plan against the chip model."""
     gm, gn, gk = p.grid(d)
+    nb = d.batch if p.batch_grid else 1
+    m_eff = d.m if p.batch_grid else d.m * d.batch
 
     # ---- compute term: the MXU processes padded blocks. Pad each block dim to
     # the hardware granule (lanes on the minor dims, sublanes on m).
     pbm = _round_up(p.bm, chip.mxu_sublanes)
     pbk = _round_up(p.bk, chip.mxu_lanes)
     pbn = _round_up(p.bn, chip.mxu_lanes)
-    padded_flops = 2 * (gm * pbm) * (gk * pbk) * (gn * pbn)
+    padded_flops = 2 * nb * (gm * pbm) * (gk * pbk) * (gn * pbn)
     # GEMV-shaped blocks (bm << lanes) cannot fill the systolic array rows:
     # the MXU issues a full 128-row pass regardless, so row-underfill is an
     # additional multiplicative loss.
@@ -141,17 +229,13 @@ def cost_matmul(d: MatmulDims, p: BlockPlan,
     compute_s = padded_flops / eff_peak
     mxu_utilization = d.flops / padded_flops
 
-    # ---- memory term: block re-visit traffic.
-    # Grid order is (m, n, k) with k innermost: A(bm,bk) reloaded per n-step,
-    # B(bk,bn) reloaded per m-step, C written once (accumulated in VMEM).
-    a_bytes = gm * gk * (p.bm * p.bk) * gn * d.dtype_bytes
-    b_bytes = gk * gn * (p.bk * p.bn) * gm * d.dtype_bytes
-    c_bytes = d.m * d.n * d.dtype_bytes
-    hbm_bytes = a_bytes + b_bytes + c_bytes
+    # ---- memory term: schedule-dependent block re-visit traffic.
+    deff = dataclasses.replace(d, m=m_eff, batch=nb)
+    hbm_bytes = _schedule_traffic(deff, p, gm, gn, gk)
     memory_s = hbm_bytes / chip.hbm_bw
 
     # ---- grid overhead: the "vertex count" term.
-    steps = gm * gn * gk
+    steps = nb * gm * gn * gk
     overhead_s = steps * chip.grid_step_overhead_s
 
     return MatmulCost(

@@ -1,4 +1,4 @@
-"""Skew-aware matmul block planner under an AMP-scaled VMEM budget.
+"""Skew-aware matmul (schedule x block-shape) planner under an AMP budget.
 
 The paper's central mechanism: Poplar's matmul planner decomposes an MM into
 vertices subject to the `availableMemoryProportion` (AMP) knob, and the chosen
@@ -10,22 +10,30 @@ Our TPU planner makes that mechanism explicit and *skew-aware*:
   * candidate blocks are MXU-aligned (bm mult of 8 pref 128; bk, bn mult 128),
   * the working set must fit `amp * vmem_bytes` (AMP knob, default 0.45 —
     Poplar's default is 0.6; we leave headroom for the pipeline's own buffers),
+  * the search now covers the full *schedule family* (costmodel.SCHEDULES):
+    K-inner output-stationary, A-resident (n-innermost; wins for right-skewed
+    m << n shapes such as the LM-head projection) and B-resident
+    (m-innermost; wins for left-skewed m >> n shapes), plus a batch-grid
+    variant when a leading batch dim is present,
   * candidates are scored with the analytic cost model and the argmin wins,
   * a `naive` mode reproduces the fixed-square-block baseline the paper's
-    GPU/IPU libraries effectively use, so benchmarks can show the
-    planned-vs-naive gap across aspect ratios.
+    GPU/IPU libraries effectively use, and a `k_inner` mode restricts the
+    search to the single legacy schedule, so benchmarks can show both the
+    planned-vs-naive and the planned-vs-single-schedule gap across ratios.
 
-Plans are cached per (dims, chip, amp) — planning runs at trace time.
+Plans are cached per (dims, chip, amp, mode) — planning runs at trace time.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Iterable
 
 from repro.core import hw
-from repro.core.costmodel import BlockPlan, MatmulCost, MatmulDims, cost_matmul
+from repro.core.costmodel import (SCHEDULES, BlockPlan, MatmulCost,
+                                  MatmulDims, cost_matmul)
 
 
 def _round_up(a: int, b: int) -> int:
@@ -35,59 +43,89 @@ def _round_up(a: int, b: int) -> int:
 def _aligned_candidates(dim: int, granule: int, cap: int) -> list[int]:
     """Aligned block-size candidates for one dimension.
 
-    Includes the full (rounded-up) dimension when small, powers-of-two
-    multiples of the granule, and 3*granule multiples to cover d_ff-style
-    shapes (e.g. 10752 = 84*128).
+    Includes the full (rounded-up) dimension when it fits the cap,
+    powers-of-two multiples of the granule, and a 1.5x companion for each
+    power of two (rounded down to a granule multiple) to cover d_ff-style
+    shapes (e.g. 10752 = 84*128).  Every candidate is a positive multiple of
+    `granule`, <= cap, and <= the rounded-up dimension.
     """
     full = _round_up(dim, granule)
-    out = {min(full, cap)}
+    hi = min(full, cap)
+    out = {hi}
     b = granule
-    while b <= min(cap, full):
+    while b <= hi:
         out.add(b)
-        out.add(min(full, b * 3 // 2 // granule * granule or granule))
+        threehalves = (b + b // 2) // granule * granule
+        if granule <= threehalves <= hi:
+            out.add(threehalves)
         b *= 2
-    return sorted(x for x in out if x > 0)
+    return sorted(out)
+
+
+def _search(d: MatmulDims, chip: hw.ChipSpec, budget: int,
+            schedules: tuple[str, ...],
+            batch_grid: bool = False) -> MatmulCost | None:
+    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+    m_eff = d.m if batch_grid else d.m * d.batch
+    bm_cands = _aligned_candidates(m_eff, sub if m_eff < lane else lane, 4096)
+    bk_cands = _aligned_candidates(d.k, lane, 4096)
+    bn_cands = _aligned_candidates(d.n, lane, 4096)
+    best: MatmulCost | None = None
+    for schedule in schedules:
+        for bm in bm_cands:
+            for bk in bk_cands:
+                for bn in bn_cands:
+                    p = BlockPlan(bm, bk, bn, schedule=schedule,
+                                  batch_grid=batch_grid)
+                    if p.vmem_bytes(d) > budget:
+                        continue
+                    c = cost_matmul(d, p, chip)
+                    if best is None or c.total_s < best.total_s or (
+                            c.total_s == best.total_s
+                            and c.grid_steps < best.grid_steps):
+                        best = c
+    return best
 
 
 @functools.lru_cache(maxsize=4096)
 def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
                 amp: float = 0.45, chip: hw.ChipSpec = hw.TPU_V5E,
-                mode: str = "skew_aware") -> MatmulCost:
-    """Choose a block plan for A[m,k] @ B[k,n].
+                mode: str = "skew_aware", batch: int = 1) -> MatmulCost:
+    """Choose a (schedule, block shape) plan for A[batch, m, k] @ B[k, n].
 
     mode:
-      "skew_aware" — full candidate search (the paper-adapted contribution).
+      "skew_aware" — full (schedule x block) search, the paper-adapted
+                     contribution.  With batch > 1 it additionally weighs
+                     folding the batch into m against a batch-grid plan.
+      "k_inner"    — the search restricted to the legacy K-innermost
+                     schedule (the pre-schedule-family planner), kept so the
+                     benchmarks can report the schedule-diversity gap.
       "naive"      — fixed 512^3-ish square blocks clipped to the problem,
                      the baseline whose skew collapse we reproduce.
     """
-    d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes)
+    d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
     budget = int(amp * chip.vmem_bytes)
 
     if mode == "naive":
-        p = _clip_plan(BlockPlan(512, 512, 512), d, chip, budget)
-        return cost_matmul(d, p, chip)
+        folded = dataclasses.replace(d, m=m * batch, batch=1)
+        p = _clip_plan(BlockPlan(512, 512, 512), folded, chip, budget)
+        return cost_matmul(folded, p, chip)
 
-    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
-    best: MatmulCost | None = None
-    bm_cands = _aligned_candidates(m, sub if m < lane else lane, 4096)
-    bk_cands = _aligned_candidates(k, lane, 4096)
-    bn_cands = _aligned_candidates(n, lane, 4096)
-    for bm in bm_cands:
-        for bk in bk_cands:
-            for bn in bn_cands:
-                p = BlockPlan(bm, bk, bn)
-                if p.vmem_bytes(d) > budget:
-                    continue
-                c = cost_matmul(d, p, chip)
-                if best is None or c.total_s < best.total_s or (
-                        c.total_s == best.total_s
-                        and c.grid_steps < best.grid_steps):
-                    best = c
+    schedules = ("k_inner",) if mode == "k_inner" else SCHEDULES
+    best = _search(d, chip, budget, schedules)
+    if batch > 1:
+        # The batched-grid kernel is K-inner only (batch rides a leading
+        # parallel grid dim); residency schedules always fold.
+        batched = _search(d, chip, budget, ("k_inner",), batch_grid=True)
+        if batched is not None and (
+                best is None or batched.total_s < best.total_s):
+            best = batched
     if best is None:
         # Budget too small for any aligned plan (tiny AMP): fall back to the
         # minimum-granule plan — mirrors Poplar failing over to a slow plan
         # rather than erroring, and keeps the AMP sweep benchmark total.
-        best = cost_matmul(d, BlockPlan(sub, lane, lane), chip)
+        best = cost_matmul(d, BlockPlan(chip.mxu_sublanes, chip.mxu_lanes,
+                                        chip.mxu_lanes), chip)
     return best
 
 
@@ -112,31 +150,47 @@ def _clip_plan(p: BlockPlan, d: MatmulDims, chip: hw.ChipSpec,
 
 def sweep_aspect_ratios(total_elems: int, ratios: Iterable[float],
                         n_out: int = 4096, *, dtype_bytes: int = 2,
-                        amp: float = 0.45,
-                        chip: hw.ChipSpec = hw.TPU_V5E) -> list[dict]:
-    """Paper Fig.5 sweep: vary the aspect ratio of A.
+                        amp: float = 0.45, chip: hw.ChipSpec = hw.TPU_V5E,
+                        vary: str = "a_aspect") -> list[dict]:
+    """Paper Fig.5 sweep, in two families.
 
-    Paper notation A[m, n] x B[n, k]: the two dimensions of A are varied at
-    constant A size; their `n` is the contraction dim (our `k`), their `k` is
-    the output dim (our `n`).  ratio = m / contraction; ratio < 1 is
-    right-skewed (wide A — the IPU's pathological direction), ratio > 1
-    left-skewed (tall A).  Returns one record per ratio with naive and
-    skew-aware roofline fractions.
+    vary="a_aspect" (the paper's): A[m, n] x B[n, k] with the two dimensions
+    of A varied at constant A size; their `n` is the contraction dim (our
+    `k`), their `k` is the output dim (our `n` = n_out).  ratio =
+    m / contraction; ratio < 1 is right-skewed (wide A — the IPU's
+    pathological direction), ratio > 1 left-skewed (tall A).
+
+    vary="output" (beyond-paper): the *output* aspect m / n is varied at
+    constant C size with the contraction fixed at n_out — the LM-head /
+    decode shape class where the schedule family (not just the block shape)
+    carries the win: right-skewed outputs want the A-resident schedule,
+    left-skewed outputs the B-resident one.
+
+    Returns one record per ratio with naive, single-schedule (K-inner-only)
+    and schedule-diverse planned roofline fractions plus the chosen schedule.
     """
     out = []
     for r in ratios:
-        m = max(1, int(round(math.sqrt(total_elems * r))))
-        k = max(1, int(round(math.sqrt(total_elems / r))))
-        naive = plan_matmul(m, k, n_out, dtype_bytes=dtype_bytes, amp=amp,
-                            chip=chip, mode="naive")
-        planned = plan_matmul(m, k, n_out, dtype_bytes=dtype_bytes, amp=amp,
-                              chip=chip, mode="skew_aware")
+        if vary == "output":
+            m = max(1, int(round(math.sqrt(total_elems * r))))
+            n = max(1, int(round(math.sqrt(total_elems / r))))
+            k = n_out
+        else:
+            m = max(1, int(round(math.sqrt(total_elems * r))))
+            k = max(1, int(round(math.sqrt(total_elems / r))))
+            n = n_out
+        kw = dict(dtype_bytes=dtype_bytes, amp=amp, chip=chip)
+        naive = plan_matmul(m, k, n, mode="naive", **kw)
+        single = plan_matmul(m, k, n, mode="k_inner", **kw)
+        planned = plan_matmul(m, k, n, mode="skew_aware", **kw)
         out.append(dict(
-            ratio=r, m=m, k=k, n=n_out,
+            ratio=r, m=m, k=k, n=n,
             naive_fraction=naive.roofline_fraction(chip),
+            single_fraction=single.roofline_fraction(chip),
             planned_fraction=planned.roofline_fraction(chip),
             naive_grid=naive.grid_steps, planned_grid=planned.grid_steps,
             naive_bound=naive.bound, planned_bound=planned.bound,
+            schedule=planned.plan.schedule,
             plan=(planned.plan.bm, planned.plan.bk, planned.plan.bn),
         ))
     return out

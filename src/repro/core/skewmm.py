@@ -1,23 +1,38 @@
 """Planned (skew-aware) matmul — the framework's matmul primitive.
 
 Every matmul in every model flows through `matmul()`.  It consults the
-skew-aware planner (AMP-budgeted, aspect-ratio-adaptive — the paper's
-mechanism made explicit) and dispatches to one of two backends:
+skew-aware planner (AMP-budgeted, aspect-ratio-adaptive, schedule-diverse —
+the paper's mechanism made explicit) and dispatches to one of two backends:
 
-  * "pallas" — the blocked TPU kernel in `repro.kernels.skew_matmul`, using
-    the planner's block shapes as its BlockSpec tiling.  On CPU this runs in
-    interpret mode (tests/benchmarks only).
+  * "pallas" — the blocked TPU kernel family in `repro.kernels.skew_matmul`,
+    using the planner's block shapes *and schedule* (K-inner /
+    A-resident / B-resident / batched-grid) as its BlockSpec tiling.  On CPU
+    this runs in interpret mode (tests/benchmarks only).
   * "xla"    — `jax.lax.dot_general` with preferred_element_type=f32.  Used
     for full-model dry-runs (XLA's own tiling then applies; the plan is still
     computed and logged so the roofline analysis can compare).
 
 Backend resolution: explicit argument > REPRO_MM_BACKEND env var > "xla".
+(`REPRO_MM_BACKEND=pallas` routes the whole model zoo through the kernels.)
+
+Fused epilogues: `matmul(..., epilogue="bias_gelu", bias=..., residual=...)`
+fuses ``act(a@b + bias) + residual`` into the kernel's last-K flush (the XLA
+backend applies the same math at fp32 before the output cast, so both
+backends are numerically aligned).  Linear layers route through this so they
+stop paying a separate elementwise HBM pass.
+
+Plan capture: wrap a region in ``with plan_capture() as log:`` to collect the
+`MatmulCost` of every matmul traced inside it without mutating global state
+(captures nest).  `enable_plan_log` / `plan_log` remain as thin shims over a
+process-global capture for legacy callers.
 """
 
 from __future__ import annotations
 
+import contextlib
 import os
 from functools import partial
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -26,19 +41,67 @@ from repro.core import hw
 from repro.core.costmodel import MatmulCost
 from repro.core.planner import plan_matmul
 
-_PLAN_LOG: list[MatmulCost] = []
-_PLAN_LOG_ENABLED = False
+_ACTIVE_LOGS: list[list[MatmulCost]] = []
+_LEGACY_LOG: list[MatmulCost] = []
+
+EPILOGUE_TOKENS = ("bias", "gelu", "silu", "residual")
+
+
+def parse_epilogue(epilogue: str | None) -> tuple[str, ...]:
+    """Validate an epilogue spec ("bias_gelu", "silu_residual", ...).
+
+    Shared by both backends and the kernels so an invalid spec fails the
+    same way everywhere.
+    """
+    if not epilogue or epilogue == "none":
+        return ()
+    tokens = tuple(epilogue.split("_"))
+    bad = [t for t in tokens if t not in EPILOGUE_TOKENS]
+    if bad or len(set(tokens)) != len(tokens):
+        raise ValueError(f"bad epilogue spec {epilogue!r}; tokens must be "
+                         f"unique and from {EPILOGUE_TOKENS}")
+    if "gelu" in tokens and "silu" in tokens:
+        raise ValueError(f"epilogue {epilogue!r} names two activations")
+    return tokens
+
+
+def _deregister_log(log: list[MatmulCost]) -> None:
+    # identity-based removal: lists compare by value, so `.remove()` could
+    # drop a different (equal-content, e.g. empty) capture.
+    for i, entry in enumerate(_ACTIVE_LOGS):
+        if entry is log:
+            del _ACTIVE_LOGS[i]
+            return
+
+
+@contextlib.contextmanager
+def plan_capture() -> Iterator[list[MatmulCost]]:
+    """Collect the plan of every matmul traced inside the block."""
+    log: list[MatmulCost] = []
+    _ACTIVE_LOGS.append(log)
+    try:
+        yield log
+    finally:
+        _deregister_log(log)
 
 
 def enable_plan_log(enabled: bool = True) -> None:
-    global _PLAN_LOG_ENABLED
-    _PLAN_LOG_ENABLED = enabled
+    """Legacy shim over a process-global plan_capture."""
     if enabled:
-        _PLAN_LOG.clear()
+        _LEGACY_LOG.clear()
+        if not any(entry is _LEGACY_LOG for entry in _ACTIVE_LOGS):
+            _ACTIVE_LOGS.append(_LEGACY_LOG)
+    else:
+        _deregister_log(_LEGACY_LOG)
 
 
 def plan_log() -> list[MatmulCost]:
-    return list(_PLAN_LOG)
+    return list(_LEGACY_LOG)
+
+
+def _record(cost: MatmulCost) -> None:
+    for log in _ACTIVE_LOGS:
+        log.append(cost)
 
 
 def _resolve_backend(backend: str | None) -> str:
@@ -50,11 +113,14 @@ def _resolve_backend(backend: str | None) -> str:
 def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
            amp: float = 0.45, plan_mode: str = "skew_aware",
            chip: hw.ChipSpec = hw.TPU_V5E,
+           epilogue: str | None = None, bias: jax.Array | None = None,
+           residual: jax.Array | None = None,
            out_dtype: jnp.dtype | None = None) -> jax.Array:
-    """C[..., m, n] = A[..., m, k] @ B[k, n], skew-planned.
+    """C[..., m, n] = epilogue(A[..., m, k] @ B[k, n]), skew-planned.
 
-    Leading batch dims of `a` are folded into m (the common LM case:
-    activations (batch, seq, d) @ weights (d, f)).
+    Leading batch dims of `a` either fold into m or ride in the grid as a
+    batched-grid plan — the planner weighs the padding both ways.  `residual`
+    must broadcast-match the output shape; `bias` is a (n,) vector.
     """
     if b.ndim != 2:
         raise ValueError(f"rhs must be 2-D (weights), got {b.shape}")
@@ -63,27 +129,49 @@ def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
     if k != k2:
         raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
 
-    flat_m = m
+    batch = 1
     for s in lead:
-        flat_m *= s
+        batch *= s
     dtype_bytes = jnp.dtype(a.dtype).itemsize
-    cost = plan_matmul(flat_m, k, n, dtype_bytes=dtype_bytes, amp=amp,
-                       chip=chip, mode=plan_mode)
-    if _PLAN_LOG_ENABLED:
-        _PLAN_LOG.append(cost)
+    cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp,
+                       chip=chip, mode=plan_mode, batch=batch)
+    _record(cost)
 
     out_dtype = out_dtype or a.dtype
     resolved = _resolve_backend(backend)
     if resolved == "pallas":
         from repro.kernels import ops  # lazy: kernels import pallas
-        a2 = a.reshape(flat_m, k)
-        out = ops.skew_matmul(a2, b, plan=cost.plan, out_dtype=out_dtype)
+        kw = dict(plan=cost.plan, epilogue=epilogue, bias=bias,
+                  out_dtype=out_dtype)
+        if cost.plan.batch_grid and lead:
+            a3 = a.reshape(batch, m, k)
+            res = None if residual is None else \
+                jnp.broadcast_to(residual, (*lead, m, n)).reshape(batch, m, n)
+            out = ops.skew_matmul_batched(a3, b, residual=res, **kw)
+        else:
+            a2 = a.reshape(batch * m, k)
+            res = None if residual is None else \
+                jnp.broadcast_to(residual, (*lead, m, n)).reshape(batch * m, n)
+            out = ops.skew_matmul(a2, b, residual=res, **kw)
         return out.reshape(*lead, m, n)
-    # XLA backend: fp32 accumulation to match the kernel semantics.
-    out = jax.lax.dot_general(
+    # XLA backend: fp32 accumulation + fp32 epilogue to match the kernel.
+    z = jax.lax.dot_general(
         a, b, (((a.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
-    return out.astype(out_dtype)
+    tokens = parse_epilogue(epilogue)
+    assert bias is not None or "bias" not in tokens, (
+        "epilogue names 'bias' but none was passed")
+    assert residual is not None or "residual" not in tokens, (
+        "epilogue names 'residual' but none was passed")
+    if "bias" in tokens:
+        z = z + bias.astype(jnp.float32)
+    if "gelu" in tokens:
+        z = jax.nn.gelu(z)
+    elif "silu" in tokens:
+        z = jax.nn.silu(z)
+    if "residual" in tokens:
+        z = z + residual.astype(jnp.float32)
+    return z.astype(out_dtype)
 
 
 def einsum_mm(spec: str, a: jax.Array, b: jax.Array, **kw) -> jax.Array:

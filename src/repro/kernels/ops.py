@@ -33,9 +33,16 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
 
 
 def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
-                amp: float = 0.45, out_dtype=None,
+                amp: float = 0.45, epilogue: str | None = None,
+                bias: jax.Array | None = None,
+                residual: jax.Array | None = None, out_dtype=None,
                 interpret: bool | None = None) -> jax.Array:
-    """Planned blocked matmul.  a (m, k) @ b (k, n) -> (m, n)."""
+    """Planned blocked matmul.  a (m, k) @ b (k, n) -> (m, n).
+
+    The plan's `schedule` field selects the kernel loop order (k_inner /
+    a_resident / b_resident).  `epilogue` fuses ``act(a@b + bias) + residual``
+    into the last-K flush; see kernels.skew_matmul for the token spec.
+    """
     m, k = a.shape
     _, n = b.shape
     if plan is None:
@@ -47,10 +54,45 @@ def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
     bn = min(plan.bn, -(-n // 128) * 128)
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
-    out = _mm.skew_matmul_padded(ap, bp, bm=bm, bk=bk, bn=bn,
+    biasp = None if bias is None else _pad_to(bias, (bn,))
+    resp = None if residual is None else _pad_to(residual, (bm, bn))
+    out = _mm.skew_matmul_padded(ap, bp, biasp, resp, bm=bm, bk=bk, bn=bn,
+                                 schedule=plan.schedule, epilogue=epilogue,
                                  out_dtype=out_dtype or a.dtype,
                                  interpret=interpret)
     return out[:m, :n]
+
+
+def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
+                        plan: BlockPlan | None = None, amp: float = 0.45,
+                        epilogue: str | None = None,
+                        bias: jax.Array | None = None,
+                        residual: jax.Array | None = None, out_dtype=None,
+                        interpret: bool | None = None) -> jax.Array:
+    """Batched-grid matmul.  a (nb, m, k) @ b (k, n) -> (nb, m, n).
+
+    The batch dim rides in the grid as an extra parallel dimension instead
+    of being folded into m — the planner's `batch_grid` plans land here.
+    """
+    nb, m, k = a.shape
+    _, n = b.shape
+    if plan is None:
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp,
+                           batch=nb).plan
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    bm = min(plan.bm, -(-m // 8) * 8)
+    bk = min(plan.bk, -(-k // 128) * 128)
+    bn = min(plan.bn, -(-n // 128) * 128)
+    ap = _pad_to(a, (1, bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    biasp = None if bias is None else _pad_to(bias, (bn,))
+    resp = None if residual is None else _pad_to(residual, (1, bm, bn))
+    out = _mm.skew_matmul_batched_padded(ap, bp, biasp, resp, bm=bm, bk=bk,
+                                         bn=bn, epilogue=epilogue,
+                                         out_dtype=out_dtype or a.dtype,
+                                         interpret=interpret)
+    return out[:, :m, :n]
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,

@@ -11,6 +11,28 @@ def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
     return out.astype(out_dtype or a.dtype)
 
 
+def matmul_epilogue_ref(a: jax.Array, b: jax.Array, *, bias=None,
+                        residual=None, epilogue: str | None = None,
+                        out_dtype=None) -> jax.Array:
+    """Oracle for the fused-epilogue matmul: out = act(A@B + bias) + residual.
+
+    Matches kernel semantics: the whole epilogue is evaluated at fp32
+    accumulator width, then cast once to the output dtype.  Supports leading
+    batch dims on `a` (and `residual`) with a shared 2-D `b`.
+    """
+    tokens = epilogue.split("_") if epilogue and epilogue != "none" else []
+    z = jnp.matmul(a, b, preferred_element_type=jnp.float32)
+    if "bias" in tokens:
+        z = z + bias.astype(jnp.float32)
+    if "gelu" in tokens:
+        z = jax.nn.gelu(z)
+    elif "silu" in tokens:
+        z = jax.nn.silu(z)
+    if "residual" in tokens:
+        z = z + residual.astype(jnp.float32)
+    return z.astype(out_dtype or a.dtype)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int | None = None,
                   softcap: float = 0.0, scale: float | None = None,

@@ -1,14 +1,46 @@
-"""Blocked TPU matmul kernel with planner-chosen BlockSpec tiling.
+"""Blocked TPU matmul kernels: a planner-selected *schedule family*.
 
 This is the paper's object of study, TPU-native: a matmul whose
-work-decomposition (block shapes, grid) is *explicitly parameterized* so the
-skew-aware planner (repro.core.planner) controls it, exactly as Poplar's AMP
-knob controls the vertex decomposition on the IPU.
+work-decomposition (block shapes, grid, loop order) is *explicitly
+parameterized* so the skew-aware planner (repro.core.planner) controls it,
+exactly as Poplar's AMP knob controls the vertex decomposition on the IPU.
 
-Grid layout: (m_blocks, n_blocks, k_blocks), K innermost and sequential
-("arbitrary"); a VMEM fp32 scratch accumulates partial products across the
-K dimension and the output block is written once on the last K step — the
-C-write-once / A,B-revisit pattern the cost model assumes.
+Schedules (mirroring costmodel.SCHEDULES — grid loop order decides which
+operand is re-streamed and which stays VMEM-resident):
+
+  "k_inner"    — grid (m, n, k), K innermost and sequential; a VMEM fp32
+                 scratch accumulates across K and the output block is written
+                 once on the last K step.  A is revisited per n-block, B per
+                 m-block: the C-write-once / A,B-revisit pattern.
+  "a_resident" — grid (m, k, n), N innermost and sequential.  The A block is
+                 pinned in VMEM across the whole n sweep (streamed exactly
+                 once); the output block is revisited per k-block and
+                 accumulated in-place (fp32-wide while gk > 1).  The planner
+                 picks this for right-skewed (m << n) shapes — the LM-head /
+                 vocab-projection class — where re-streaming A per n-block is
+                 the dominant waste.
+  "b_resident" — grid (n, k, m), M innermost; the mirror image.  B streamed
+                 once; chosen for left-skewed (m >> n) shapes.
+
+  A batched-grid variant (skew_matmul_batched_padded) puts a leading batch
+  dim in the grid as an extra parallel dimension instead of folding it into
+  m — the planner selects it when folding would straddle batch boundaries
+  with badly padded row blocks.
+
+Fused epilogues: every schedule can fuse ``out = act(acc + bias) + residual``
+into the last-K flush (act in {gelu, silu}), so linear layers stop paying a
+separate elementwise HBM pass.  ``epilogue`` is an underscore-joined token
+string, e.g. "bias_gelu" or "silu_residual"; the bias / residual operands
+must be passed iff named.  For the resident schedules with gk > 1 the kernel
+accumulates through an fp32 output which is cast back to ``out_dtype``
+outside the pallas_call (the cost model charges that extra pass).
+
+Note on the resident schedules: the output block index recurs
+non-consecutively across the k grid dim, so both the k and inner dims are
+marked "arbitrary" (sequential) and correctness relies on Pallas's
+write-back / re-fetch of revisited output blocks.  When gk == 1 (the common
+case the planner targets: the whole contraction in one block) there is no
+revisit at all.
 """
 
 from __future__ import annotations
@@ -20,47 +52,228 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# The spec parser lives with the dispatch layer so both backends validate
+# identically; re-exported here for kernel-level callers.
+from repro.core.skewmm import parse_epilogue  # noqa: E402
 
-def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k_steps: int):
-    k_step = pl.program_id(2)
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+
+def _apply_epilogue(z, tokens, bias_ref, res_ref):
+    """out = act(z + bias) + residual, computed at accumulator (f32) width."""
+    if "bias" in tokens:
+        z = z + bias_ref[...].astype(jnp.float32)
+    if "gelu" in tokens:
+        z = jax.nn.gelu(z)
+    elif "silu" in tokens:
+        z = jax.nn.silu(z)
+    if "residual" in tokens:
+        z = z + res_ref[...].astype(jnp.float32)
+    return z
+
+
+def _epilogue_refs(refs, tokens):
+    """Split kernel refs [a, b, (bias), (residual)] after the operands."""
+    it = iter(refs)
+    bias_ref = next(it) if "bias" in tokens else None
+    res_ref = next(it) if "residual" in tokens else None
+    return bias_ref, res_ref
+
+
+# --------------------------------------------------------------- kernel bodies
+def _k_inner_kernel(*refs, tokens: tuple[str, ...], n_k_steps: int,
+                    k_axis: int):
+    a_ref, b_ref, *rest = refs
+    acc_ref = rest[-1]
+    o_ref = rest[-2]
+    bias_ref, res_ref = _epilogue_refs(rest[:-2], tokens)
+    k_step = pl.program_id(k_axis)
 
     @pl.when(k_step == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+    a = a_ref[...]
+    a = a[0] if a.ndim == 3 else a          # batched-grid: (1, bm, bk) block
+    acc_ref[...] += jnp.dot(a, b_ref[...],
                             preferred_element_type=jnp.float32)
 
     @pl.when(k_step == n_k_steps - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        z = _apply_epilogue(acc_ref[...], tokens, bias_ref, res_ref)
+        o_ref[...] = z.astype(o_ref.dtype).reshape(o_ref.shape)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "out_dtype",
+def _resident_kernel(*refs, tokens: tuple[str, ...], n_k_steps: int):
+    """Shared body for a_resident / b_resident: k is the *middle* grid dim,
+    so partial products accumulate through the revisited output block."""
+    a_ref, b_ref, *rest = refs
+    o_ref = rest[-1]
+    bias_ref, res_ref = _epilogue_refs(rest[:-1], tokens)
+    partial = jnp.dot(a_ref[...], b_ref[...],
+                      preferred_element_type=jnp.float32)
+    if n_k_steps == 1:
+        z = _apply_epilogue(partial, tokens, bias_ref, res_ref)
+        o_ref[...] = z.astype(o_ref.dtype)
+        return
+    k_step = pl.program_id(1)
+
+    @pl.when(k_step == 0)
+    def _first():
+        o_ref[...] = partial
+
+    @pl.when(jnp.logical_and(k_step > 0, k_step < n_k_steps - 1))
+    def _middle():
+        o_ref[...] += partial
+
+    @pl.when(k_step == n_k_steps - 1)
+    def _last():
+        z = _apply_epilogue(o_ref[...] + partial, tokens, bias_ref, res_ref)
+        o_ref[...] = z
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "schedule",
+                                             "epilogue", "out_dtype",
                                              "interpret"))
-def skew_matmul_padded(a: jax.Array, b: jax.Array, *, bm: int, bk: int,
-                       bn: int, out_dtype=jnp.float32,
+def skew_matmul_padded(a: jax.Array, b: jax.Array, bias=None, residual=None,
+                       *, bm: int, bk: int, bn: int,
+                       schedule: str = "k_inner", epilogue: str | None = None,
+                       out_dtype=jnp.float32,
                        interpret: bool = False) -> jax.Array:
-    """C = A @ B where block shapes divide the (pre-padded) operand dims."""
+    """C = epilogue(A @ B) where block shapes divide the (pre-padded) dims."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
         f"operands must be pre-padded to block multiples: "
         f"{(m, k, n)} vs {(bm, bk, bn)}")
+    tokens = parse_epilogue(epilogue)
     gm, gn, gk = m // bm, n // bn, k // bk
 
-    return pl.pallas_call(
-        functools.partial(_mm_kernel, n_k_steps=gk),
-        grid=(gm, gn, gk),
-        in_specs=[
+    operands = [a, b]
+    if "bias" in tokens:
+        assert bias is not None and bias.shape == (n,), (
+            "epilogue names 'bias': pass a pre-padded (n,) vector")
+        operands.append(bias.reshape(1, n))
+    if "residual" in tokens:
+        assert residual is not None and residual.shape == (m, n), (
+            "epilogue names 'residual': pass a pre-padded (m, n) array")
+        operands.append(residual)
+
+    if schedule == "k_inner":
+        grid = (gm, gn, gk)
+        in_specs = [
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        ]
+        if "bias" in tokens:
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        if "residual" in tokens:
+            in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        return pl.pallas_call(
+            functools.partial(_k_inner_kernel, tokens=tokens, n_k_steps=gk,
+                              k_axis=2),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            compiler_params=_CompilerParams(
+                dimension_semantics=("parallel", "parallel", "arbitrary")),
+            interpret=interpret,
+        )(*operands)
+
+    if schedule == "a_resident":
+        # grid (m, k, n): n innermost — A block pinned across the n sweep.
+        grid = (gm, gk, gn)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+        ]
+        if "bias" in tokens:
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, kk, j: (0, j)))
+        if "residual" in tokens:
+            in_specs.append(pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)))
+        out_spec = pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j))
+        semantics = ("parallel", "arbitrary", "arbitrary")
+    elif schedule == "b_resident":
+        # grid (n, k, m): m innermost — B block pinned across the m sweep.
+        grid = (gn, gk, gm)
+        in_specs = [
+            pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
+        ]
+        if "bias" in tokens:
+            in_specs.append(pl.BlockSpec((1, bn), lambda j, kk, i: (0, j)))
+        if "residual" in tokens:
+            in_specs.append(pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)))
+        out_spec = pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j))
+        semantics = ("parallel", "arbitrary", "arbitrary")
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    # gk > 1 accumulates through the output at f32; cast back outside.
+    acc_dtype = out_dtype if gk == 1 else jnp.float32
+    out = pl.pallas_call(
+        functools.partial(_resident_kernel, tokens=tokens, n_k_steps=gk),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_dtype),
+        compiler_params=_CompilerParams(dimension_semantics=semantics),
         interpret=interpret,
-    )(a, b)
+    )(*operands)
+    return out.astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "epilogue",
+                                             "out_dtype", "interpret"))
+def skew_matmul_batched_padded(a: jax.Array, b: jax.Array, bias=None,
+                               residual=None, *, bm: int, bk: int, bn: int,
+                               epilogue: str | None = None,
+                               out_dtype=jnp.float32,
+                               interpret: bool = False) -> jax.Array:
+    """C[nb] = epilogue(A[nb] @ B): leading batch dim in the grid (K-inner).
+
+    The planner selects this over folding the batch into m when folding
+    would straddle batch boundaries with a badly padded row block.
+    """
+    nb, m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
+        f"operands must be pre-padded to block multiples: "
+        f"{(m, k, n)} vs {(bm, bk, bn)}")
+    tokens = parse_epilogue(epilogue)
+    gm, gn, gk = m // bm, n // bn, k // bk
+
+    operands = [a, b]
+    in_specs = [
+        pl.BlockSpec((1, bm, bk), lambda nb_, i, j, kk: (nb_, i, kk)),
+        pl.BlockSpec((bk, bn), lambda nb_, i, j, kk: (kk, j)),
+    ]
+    if "bias" in tokens:
+        assert bias is not None and bias.shape == (n,)
+        operands.append(bias.reshape(1, n))
+        in_specs.append(pl.BlockSpec((1, bn), lambda nb_, i, j, kk: (0, j)))
+    if "residual" in tokens:
+        assert residual is not None and residual.shape == (nb, m, n)
+        operands.append(residual)
+        in_specs.append(
+            pl.BlockSpec((1, bm, bn), lambda nb_, i, j, kk: (nb_, i, j)))
+
+    return pl.pallas_call(
+        functools.partial(_k_inner_kernel, tokens=tokens, n_k_steps=gk,
+                          k_axis=3),
+        grid=(nb, gm, gn, gk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), lambda nb_, i, j, kk: (nb_, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(*operands)

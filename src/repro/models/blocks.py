@@ -68,6 +68,9 @@ def block_fwd(x: jax.Array, p: dict, cfg, kind: str,
         h = rmsnorm(x, p["ln2"], cfg.norm_eps)
         if _ffn_is_moe(kind):
             h, aux = moe.moe_mlp(h, p["moe"], cfg)
+        elif not cfg.use_post_norm:
+            # residual add fused into the down projection's epilogue
+            return layers.mlp(h, p["mlp"], cfg, residual=x), aux
         else:
             h = layers.mlp(h, p["mlp"], cfg)
         if cfg.use_post_norm:

@@ -103,7 +103,8 @@ def encode(params, cfg, frames):
         x = x + attention.gqa_attn(h, p["attn"], cfg, window=None,
                                    positions=pos, causal=False)
         h = rmsnorm(x, p["ln2"], cfg.norm_eps)
-        return x + layers.mlp(h, p["mlp"], cfg), None
+        # residual add fused into the down projection's epilogue
+        return layers.mlp(h, p["mlp"], cfg, residual=x), None
 
     x, _ = jax.lax.scan(jax.checkpoint(enc_block), x, params["enc"])
     return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
@@ -125,7 +126,8 @@ def decode_hidden(params, cfg, tokens, enc_out):
         x = x + cross_attn(h, cross_kv(enc_out, p["xattn"], cfg),
                            p["xattn"], cfg)
         h = rmsnorm(x, p["ln2"], cfg.norm_eps)
-        return x + layers.mlp(h, p["mlp"], cfg), None
+        # residual add fused into the down projection's epilogue
+        return layers.mlp(h, p["mlp"], cfg, residual=x), None
 
     x, _ = jax.lax.scan(jax.checkpoint(dec_block), x, params["dec"])
     return rmsnorm(x, params["final_norm"], cfg.norm_eps)

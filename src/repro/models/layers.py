@@ -86,15 +86,23 @@ def init_mlp(key, cfg, d_ff: int | None = None) -> dict:
             "w_down": linear_init(ks[1], f, d, dt)}
 
 
-def mlp(x: jax.Array, p: dict, cfg) -> jax.Array:
-    # activations in native dtype: silu/gelu are bounded and bf16-safe;
-    # matmuls still accumulate fp32 inside skewmm (§Perf iteration B1).
+def mlp(x: jax.Array, p: dict, cfg, residual: jax.Array | None = None
+        ) -> jax.Array:
+    """MLP with the activation fused into the up/gate projection's epilogue
+    and (optionally) the block's residual add fused into the down
+    projection — each linear is a single planned kernel, no separate
+    elementwise HBM pass.  The epilogue runs at fp32 accumulator width
+    before the one cast to the native dtype (§Perf iteration B1 still
+    holds: matmuls accumulate fp32 inside skewmm)."""
     if cfg.mlp_type == "swiglu":
-        g = skewmm.matmul(x, p["w_gate"])
+        g = skewmm.matmul(x, p["w_gate"], epilogue="silu")
         u = skewmm.matmul(x, p["w_up"])
-        h = jax.nn.silu(g) * u
+        h = g * u
     else:
-        h = jax.nn.gelu(skewmm.matmul(x, p["w_up"]))
+        h = skewmm.matmul(x, p["w_up"], epilogue="gelu")
+    if residual is not None:
+        return skewmm.matmul(h, p["w_down"], epilogue="residual",
+                             residual=residual)
     return skewmm.matmul(h, p["w_down"])
 
 

@@ -145,7 +145,10 @@ def moe_mlp_shardmap(x: jax.Array, p: dict, cfg, mesh):
         aux = jax.lax.pmean(aux, dp)
         return y.reshape(xl.shape).astype(x.dtype), aux
 
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # older jax keeps it in experimental
+        from jax.experimental.shard_map import shard_map
     y, aux = shard_map(
         body, mesh=mesh,
         in_specs=(P(dp, None, None), P(None, None),
@@ -182,5 +185,6 @@ def moe_mlp(x: jax.Array, p: dict, cfg):
         xf, p, cfg, n_local_experts=cfg.n_experts, expert_offset=0)
     y = y.astype(x.dtype)
     if cfg.n_shared_experts:
-        y = y + layers.mlp(xf, p["shared"], cfg)
+        # shared-expert output lands on the routed sum via the fused epilogue
+        y = layers.mlp(xf, p["shared"], cfg, residual=y)
     return y.reshape(b, s, d), aux

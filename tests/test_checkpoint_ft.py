@@ -3,6 +3,7 @@
 import os
 
 import jax
+from repro.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -61,8 +62,7 @@ def test_elastic_restore_to_new_mesh(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
     mgr.save(3, tree, blocking=True)
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, n), ("data", "model"))
     specs = {"w": jax.sharding.PartitionSpec(None, None)}
     out = mgr.restore(tree, specs=specs, mesh=mesh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))

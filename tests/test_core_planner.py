@@ -1,6 +1,7 @@
 """Planner / cost-model / vertex-stats / roofline-parsing unit tests."""
 
 import jax
+from repro.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -70,10 +71,93 @@ def test_plan_cache_hits():
     assert a is b                        # lru_cache identity
 
 
+# ------------------------------------------------------- schedule family
+def test_aligned_candidates_are_aligned_and_capped():
+    from repro.core.planner import _aligned_candidates, _round_up
+    for dim in (1, 7, 100, 384, 1000, 4096, 10752, 65536):
+        for granule in (8, 128):
+            for cap in (256, 4096):
+                cands = _aligned_candidates(dim, granule, cap)
+                assert cands, (dim, granule, cap)
+                assert cands == sorted(set(cands))
+                for c in cands:
+                    assert c > 0 and c % granule == 0, (dim, granule, cap, c)
+                    assert c <= cap, (dim, granule, cap, c)
+                    assert c <= _round_up(dim, granule), (dim, granule, cap, c)
+
+
+def test_right_skew_selects_a_resident():
+    """The LM-head shape class (m << n, moderate k): A-resident wins by
+    streaming A exactly once instead of once per n-block."""
+    c = plan_matmul(256, 4096, 65536)
+    assert c.plan.schedule == "a_resident"
+    single = plan_matmul(256, 4096, 65536, mode="k_inner")
+    assert c.total_s < single.total_s
+
+
+def test_left_skew_selects_b_resident():
+    c = plan_matmul(65536, 4096, 256)
+    assert c.plan.schedule == "b_resident"
+
+
+def test_square_keeps_k_inner():
+    assert plan_matmul(4096, 4096, 4096).plan.schedule == "k_inner"
+
+
+def test_sweep_schedules_differ_across_skew():
+    """Acceptance: ratio 1/256 and 256 land on different schedules."""
+    rows = sweep_aspect_ratios(4096 * 4096, [1 / 256, 256.0])
+    assert rows[0]["schedule"] != rows[1]["schedule"]
+    # schedule-diverse planning never loses to the single-schedule search
+    assert all(r["planned_fraction"] >= r["single_fraction"] - 1e-9
+               for r in rows)
+
+
+def test_output_skew_sweep_beats_single_schedule():
+    rows = sweep_aspect_ratios(4096 * 4096, [1 / 256, 1 / 16, 256.0],
+                               vary="output")
+    right = rows[0]
+    assert right["schedule"] == "a_resident"
+    assert right["planned_fraction"] > right["single_fraction"]
+
+
+def test_plan_search_respects_amp_budget_all_schedules():
+    for m, k, n in ((256, 4096, 65536), (65536, 4096, 256), (512, 512, 512)):
+        c = plan_matmul(m, k, n, amp=0.3)
+        assert c.vmem_bytes <= 0.3 * hw.TPU_V5E.vmem_bytes
+
+
+def test_batched_plan_covers_batch():
+    c = plan_matmul(100, 256, 256, batch=8)
+    d = c.dims
+    assert d.batch == 8
+    gm, gn, gk = c.plan.grid(d)
+    rows = d.m if c.plan.batch_grid else d.m * d.batch
+    assert gm * c.plan.bm >= rows
+    # folded and batch-grid agree on total work
+    assert c.dims.flops == 2 * 8 * 100 * 256 * 256
+
+
+def test_plan_capture_is_scoped():
+    from repro.core import skewmm
+    a = jnp.ones((8, 64), jnp.bfloat16)
+    b = jnp.ones((64, 32), jnp.bfloat16)
+    with skewmm.plan_capture() as outer:
+        skewmm.matmul(a, b)
+        with skewmm.plan_capture() as inner:
+            skewmm.matmul(a, b)
+    assert len(inner) == 1 and len(outer) == 2
+    # legacy shim still works and is isolated from closed captures
+    skewmm.enable_plan_log(True)
+    skewmm.matmul(a, b)
+    assert len(skewmm.plan_log()) == 1
+    skewmm.enable_plan_log(False)
+    assert len(inner) == 1 and len(outer) == 2
+
+
 # ------------------------------------------------------------- roofline
 def test_collective_parse_all_reduce():
-    mesh = jax.make_mesh((jax.device_count(),), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((jax.device_count(),), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     x = jax.ShapeDtypeStruct((32, 64), jnp.float32,
                              sharding=NamedSharding(mesh, P("data", None)))

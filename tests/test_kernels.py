@@ -56,6 +56,84 @@ def test_skew_matmul_out_dtype():
     assert got.dtype == jnp.float32
 
 
+# ------------------------------------------- schedule family x fused epilogues
+_SCHED_SHAPES = [
+    (96, 256, 128),      # square-ish
+    (384, 256, 48),      # left-skewed (m >> n)
+    (32, 256, 512),      # right-skewed (m << n)
+    (100, 300, 200),     # unaligned everything
+]
+
+
+@pytest.mark.parametrize("schedule", ["k_inner", "a_resident", "b_resident"])
+@pytest.mark.parametrize("epilogue", [None, "bias", "gelu", "silu_residual",
+                                      "bias_gelu_residual"])
+@pytest.mark.parametrize("mkn", _SCHED_SHAPES)
+def test_schedule_epilogue_matches_oracle(schedule, epilogue, mkn):
+    m, k, n = mkn
+    a, b = _arr((m, k), scale=0.3), _arr((k, n), scale=0.3)
+    bias, res = _arr((n,)), _arr((m, n))
+    plan = BlockPlan(32, 128, 128, schedule=schedule)
+    got = ops.skew_matmul(a, b, plan=plan, epilogue=epilogue, bias=bias,
+                          residual=res)
+    want = ref.matmul_epilogue_ref(a, b, bias=bias, residual=res,
+                                   epilogue=epilogue)
+    assert got.dtype == want.dtype and got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("schedule", ["a_resident", "b_resident"])
+def test_resident_single_k_block(schedule):
+    """gk == 1: the resident schedules' no-revisit fast path."""
+    a, b = _arr((64, 200), scale=0.3), _arr((200, 96), scale=0.3)
+    plan = BlockPlan(32, 256, 32, schedule=schedule)
+    got = ops.skew_matmul(a, b, plan=plan, epilogue="gelu")
+    want = ref.matmul_epilogue_ref(a, b, epilogue="gelu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("schedule", ["k_inner", "a_resident", "b_resident"])
+def test_schedule_bf16_epilogue(schedule):
+    a = _arr((64, 256), jnp.bfloat16, 0.3)
+    b = _arr((256, 128), jnp.bfloat16, 0.3)
+    res = _arr((64, 128), jnp.bfloat16)
+    plan = BlockPlan(32, 128, 128, schedule=schedule)
+    got = ops.skew_matmul(a, b, plan=plan, epilogue="silu_residual",
+                          residual=res)
+    want = ref.matmul_epilogue_ref(a, b, residual=res,
+                                   epilogue="silu_residual")
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(a.dtype))
+
+
+@pytest.mark.parametrize("epilogue", [None, "bias_silu_residual"])
+def test_batched_grid_matches_oracle(epilogue):
+    nb, m, k, n = 3, 50, 300, 200
+    a, b = _arr((nb, m, k), scale=0.3), _arr((k, n), scale=0.3)
+    bias, res = _arr((n,)), _arr((nb, m, n))
+    plan = BlockPlan(16, 128, 128, batch_grid=True)
+    got = ops.skew_matmul_batched(a, b, plan=plan, epilogue=epilogue,
+                                  bias=bias, residual=res)
+    want = ref.matmul_epilogue_ref(a, b, bias=bias, residual=res,
+                                   epilogue=epilogue)
+    assert got.shape == (nb, m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=1e-4)
+
+
+def test_epilogue_spec_validation():
+    a, b = _arr((32, 128)), _arr((128, 32))
+    with pytest.raises(ValueError):
+        ops.skew_matmul(a, b, plan=BlockPlan(32, 128, 32),
+                        epilogue="gelu_silu")
+    with pytest.raises(ValueError):
+        ops.skew_matmul(a, b, plan=BlockPlan(32, 128, 32),
+                        epilogue="tanh")
+
+
 # ------------------------------------------------------------ flash attention
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("kw", [

@@ -4,6 +4,7 @@ expert-parallel spec wiring (added during §Perf iteration A3)."""
 import dataclasses
 
 import jax
+from repro.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -32,8 +33,7 @@ def test_shardmap_path_matches_fallback():
     p = _params(cfg)
     x = jnp.asarray(RNG.normal(size=(2, 16, cfg.d_model)) * 0.3, jnp.float32)
     y1, aux1 = moe.moe_mlp(x, p, cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     shd.set_annotation_mesh(mesh)
     try:
         y2, aux2 = moe.moe_mlp(x, p, cfg)
@@ -51,8 +51,7 @@ def test_shardmap_multidevice_if_available():
     p = _params(cfg)
     x = jnp.asarray(RNG.normal(size=(n, 16, cfg.d_model)) * 0.3, jnp.float32)
     y1, _ = moe.moe_mlp(x, p, cfg)
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, n), ("data", "model"))
     shd.set_annotation_mesh(mesh)
     try:
         y2, _ = moe.moe_mlp(x, p, cfg)
@@ -89,7 +88,7 @@ def test_aux_loss_decreases_for_balanced_router():
 def test_fsdp_specs_shard_params_over_data():
     from jax.sharding import AbstractMesh
     from repro.models.model import param_shapes
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = AbstractMesh((("data", 16), ("model", 16)))
     shapes = param_shapes(get_config("deepseek-v3-671b"))
     specs = shd.tree_param_specs(shapes, mesh, fsdp=True)
     moe_spec = specs["stage1"]["b0"]["moe"]

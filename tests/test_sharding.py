@@ -6,6 +6,7 @@ devices this host has.
 """
 
 import jax
+from repro.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import AbstractMesh, PartitionSpec as P
@@ -14,8 +15,9 @@ from repro.configs.base import all_arch_ids, get_config
 from repro.distributed import sharding as shd
 from repro.models.model import param_shapes
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# AbstractMesh takes ((name, size), ...) pairs in current JAX.
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_param_specs_cover_tree_and_divide():
@@ -64,28 +66,34 @@ def test_zero1_shards_largest_replicated_dim():
     assert tuple(spec) == (None, "data")
 
 
+def _norm(spec):
+    """Unwrap 1-tuple axes: older jax PartitionSpec doesn't normalize them."""
+    return tuple(a[0] if isinstance(a, tuple) and len(a) == 1 else a
+                 for a in tuple(spec))
+
+
 def test_batch_spec_pod_composition():
     spec = shd.batch_spec((256, 4096), MESH)
-    assert tuple(spec)[0] == "data"          # P normalizes 1-tuples
+    assert _norm(spec)[0] == "data"
     spec3 = shd.batch_spec((256, 4096), MESH3)
-    assert tuple(spec3)[0] == ("pod", "data")
+    assert _norm(spec3)[0] == ("pod", "data")
     # batch=1 (long_500k): replicated
-    assert tuple(shd.batch_spec((1, 8), MESH))[0] is None
+    assert _norm(shd.batch_spec((1, 8), MESH))[0] is None
 
 
 def test_cache_specs_rules():
     kv = jax.ShapeDtypeStruct((4, 32, 64, 16, 128), jnp.bfloat16)
-    assert tuple(shd.cache_leaf_spec("k", kv, MESH)) == \
+    assert _norm(shd.cache_leaf_spec("k", kv, MESH)) == \
         (None, "data", None, "model", None)
     # MQA (kv=1): sequence dim takes the model axis instead
     kv1 = jax.ShapeDtypeStruct((4, 32, 4096, 1, 128), jnp.bfloat16)
-    assert tuple(shd.cache_leaf_spec("k", kv1, MESH)) == \
+    assert _norm(shd.cache_leaf_spec("k", kv1, MESH)) == \
         (None, "data", "model", None, None)
     lat = jax.ShapeDtypeStruct((58, 32, 4096, 512), jnp.bfloat16)
-    assert tuple(shd.cache_leaf_spec("latent", lat, MESH)) == \
+    assert _norm(shd.cache_leaf_spec("latent", lat, MESH)) == \
         (None, "data", "model", None)
     ssm = jax.ShapeDtypeStruct((64, 32, 80, 128, 64), jnp.float32)
-    assert tuple(shd.cache_leaf_spec("state", ssm, MESH)) == \
+    assert _norm(shd.cache_leaf_spec("state", ssm, MESH)) == \
         (None, "data", "model", None, None)
 
 
@@ -96,8 +104,7 @@ def test_guard_falls_back_to_replication():
 
 def test_shard_like_puts_arrays():
     n = jax.device_count()
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, n), ("data", "model"))
     tree = {"w": jnp.ones((4, n * 2), jnp.float32)}
     out = shd.shard_like(tree, {"w": P(None, "model")}, mesh)
     assert out["w"].sharding.spec == P(None, "model")

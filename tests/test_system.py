@@ -84,18 +84,14 @@ def test_gradient_compression_training_converges(tmp_path):
 
 
 def test_plan_log_census_is_populated():
-    """skewmm plan logging captures the whole model's matmul workload."""
+    """skewmm plan capture sees the whole model's matmul workload."""
     from repro.core import skewmm
     cfg = get_config("gemma2-27b").reduced()
     bundle = build_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
-    skewmm.enable_plan_log(True)
-    try:
+    with skewmm.plan_capture() as log:
         h, _ = bundle.hidden_fn(params,
                                 {"tokens": jnp.zeros((1, 16), jnp.int32)})
         bundle.logits_fn(params, h)
-        log = skewmm.plan_log()
-    finally:
-        skewmm.enable_plan_log(False)
     assert len(log) >= 4                      # qkv/o/mlp/unembed at least
     assert any(c.dims.skew < -1 for c in log)  # the vocab right-skew
