@@ -1,5 +1,7 @@
-"""The paper's experiment, reproduced end to end on the TPU cost model +
-Pallas kernel (interpret mode): squared and skewed MM, naive vs planned.
+"""The paper's experiment, reproduced end to end on the cost model +
+Pallas kernel (interpret mode): squared and skewed MM, naive vs planned,
+plus the paper's cross-device comparison (IPU GC200 vs RTX 2080 Ti) driven
+entirely through the context-scoped matmul config — no per-call kwargs.
 
     PYTHONPATH=src python examples/skewmm_planner_demo.py
 """
@@ -7,7 +9,9 @@ Pallas kernel (interpret mode): squared and skewed MM, naive vs planned.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hw
+from repro.core import hw, skewmm
+from repro.core.config import mm_config
+from repro.core.epilogue import Epilogue
 from repro.core.planner import plan_matmul, sweep_aspect_ratios
 from repro.core.vertexstats import paper_vertex_table
 from repro.kernels import ops, ref
@@ -32,9 +36,38 @@ def main():
               f"{r['planned_fraction']:>8.3f} {r['naive_grid']:>7} "
               f"{r['planned_grid']:>7}")
 
+    # The cross-device comparison is one mm_config line per chip: the sweep
+    # itself takes zero chip kwargs — it resolves through the context.
+    print("\n=== paper §6: cross-chip skew robustness (naive = library "
+          "decomposition) ===")
+    print(f"{'chip':>14} {'naive_min':>10} {'naive_spread':>13} "
+          f"{'planned_spread':>15}")
+    for chip in ("ipu_gc200", "gpu_rtx2080ti", "tpu_v5e"):
+        with mm_config(chip=chip):
+            rows = sweep_aspect_ratios(4096 * 4096,
+                                       [2.0 ** i for i in range(-8, 9, 2)])
+        nv = [r["naive_fraction"] for r in rows]
+        pl = [r["planned_fraction"] for r in rows]
+        print(f"{chip:>14} {min(nv):>10.3f} {max(nv) - min(nv):>13.3f} "
+              f"{max(pl) - min(pl):>15.3f}")
+    print("(the IPU's flat naive curve vs the GPUs' sag at the extremes is "
+          "the paper's finding; the skew-aware planner flattens every chip)")
+
     print("\n=== paper §5.1 vertex counts (naive plan) ===")
     for label, row in zip(("left", "square", "right"), paper_vertex_table()):
         print(f"{label:>7}: {row.row()}")
+
+    print("\n=== paper §2.4: one AMP knob over a whole region "
+          "(mm_config) ===")
+    a = jnp.ones((512, 4096), jnp.bfloat16)
+    b = jnp.ones((4096, 4096), jnp.bfloat16)
+    for amp in (0.1, 0.45, 0.9):
+        with mm_config(amp=amp), skewmm.plan_capture() as log:
+            skewmm.matmul(a, b)
+        c = log[0]
+        print(f"amp={amp:<4}: plan=({c.plan.bm},{c.plan.bk},{c.plan.bn}) "
+              f"vmem={c.vmem_bytes / 2**20:.1f}MiB "
+              f"frac={c.roofline_fraction(hw.TPU_V5E):.3f}")
 
     print("\n=== kernel correctness on a skewed case (interpret mode) ===")
     rng = np.random.default_rng(0)
@@ -44,6 +77,15 @@ def main():
     want = ref.matmul_ref(a, b)
     err = float(jnp.max(jnp.abs(got - want)))
     print(f"skew_matmul(96x1024x4096) max|err| vs oracle = {err:.2e}")
+
+    # Structured epilogue: one fused kernel for act(scale*(a@b)+bias)+res.
+    bias = jnp.asarray(rng.normal(size=(4096,)), jnp.float32)
+    res = jnp.asarray(rng.normal(size=(96, 4096)), jnp.float32)
+    ep = Epilogue(act="gelu", scale=0.5, bias=bias, residual=res)
+    got = ops.skew_matmul(a, b, epilogue=ep)
+    want = ref.matmul_epilogue_ref(a, b, epilogue=ep)
+    err = float(jnp.max(jnp.abs(got - want)))
+    print(f"fused Epilogue(gelu, scale, bias, residual) max|err| = {err:.2e}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,11 @@ Analyzing Squared and Skewed Matrix Multiplication" (Shekofteh et al., 2023).
 Public API:
     repro.core.skewmm.matmul       -- planned (skew-aware) matmul
     repro.core.planner.plan_matmul -- the AMP-budgeted block planner
+    repro.core.mm_config           -- context-scoped matmul configuration
+                                      (session-scoped AMP/chip/backend)
+    repro.core.Epilogue            -- structured fused-epilogue spec
+    repro.core.hw.get_chip         -- chip registry (tpu_v5e, ipu_gc200,
+                                      gpu_a30, gpu_rtx2080ti, ...)
     repro.configs.registry         -- architecture registry (--arch ids)
     repro.launch.mesh.make_production_mesh
 """

@@ -1,10 +1,16 @@
 """The paper's primary contribution, TPU-adapted.
 
 Skew-aware matmul planning under an explicit fast-memory (AMP) budget,
-the planned-matmul primitive used by the whole model zoo, grid/"vertex"
-statistics, and roofline-term extraction from compiled XLA artifacts.
+the planned-matmul primitive used by the whole model zoo, context-scoped
+matmul configuration (the session-scoped AMP knob), structured fused
+epilogues, a chip registry, grid/"vertex" statistics, and roofline-term
+extraction from compiled XLA artifacts.
 """
 
-from repro.core import costmodel, hw, planner, roofline, skewmm, vertexstats
+from repro.core import (config, costmodel, epilogue, hw, planner, roofline,
+                        skewmm, vertexstats)
+from repro.core.config import MatmulConfig, mm_config
+from repro.core.epilogue import Epilogue
 
-__all__ = ["costmodel", "hw", "planner", "roofline", "skewmm", "vertexstats"]
+__all__ = ["config", "costmodel", "epilogue", "hw", "planner", "roofline",
+           "skewmm", "vertexstats", "MatmulConfig", "mm_config", "Epilogue"]

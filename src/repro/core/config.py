@@ -1,0 +1,189 @@
+"""Context-scoped matmul configuration — the AMP knob made session-scoped.
+
+The paper's central knob, Poplar's ``availableMemoryProportion``, is a
+*session-scoped engine option*: you set it once and every matmul the engine
+compiles is planned under it.  This module gives our planner the same shape
+of API instead of per-call kwarg threading:
+
+    with mm_config(amp=0.3, chip="ipu_gc200"):
+        logits = model(params, batch)        # every matmul re-planned
+
+`MatmulConfig` is a frozen dataclass of the six knobs every planned matmul
+resolves (`backend`, `amp`, `chip`, `plan_mode`, `out_dtype`, `interpret`).
+Resolution is layered, innermost wins:
+
+    defaults  <  REPRO_MM_BACKEND env var  <  mm_config stack (outer..inner)
+              <  explicit per-call kwargs
+
+The stack is thread-local (a fresh thread starts from defaults + env), so
+concurrent serving threads can pin different configs.  Contexts nest with
+*field-wise* override: an inner ``mm_config(amp=0.2)`` keeps the outer
+context's chip.
+
+`chip` accepts either a `hw.ChipSpec` or a registered chip name string
+(see `hw.register_chip` / `hw.get_chip`); it is normalized to the spec at
+resolve time so the planner's lru_cache keys stay canonical.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Any, Iterator
+
+from repro.core import hw
+
+BACKENDS = ("xla", "pallas")
+PLAN_MODES = ("skew_aware", "k_inner", "naive")
+
+_ENV_BACKEND = "REPRO_MM_BACKEND"
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulConfig:
+    """The fully-resolved settings one planned matmul runs under.
+
+    out_dtype=None means "the lhs dtype"; interpret=None means "interpret
+    off-TPU" (the kernels' auto rule).  Everything else is concrete.
+    """
+
+    backend: str = "xla"
+    amp: float = 0.45
+    chip: hw.ChipSpec | str = "tpu_v5e"
+    plan_mode: str = "skew_aware"
+    out_dtype: Any = None
+    interpret: bool | None = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown matmul backend {self.backend!r}; "
+                             f"must be one of {BACKENDS}")
+        if self.plan_mode not in PLAN_MODES:
+            raise ValueError(f"unknown plan_mode {self.plan_mode!r}; "
+                             f"must be one of {PLAN_MODES}")
+        if not 0.0 < self.amp <= 1.0:
+            raise ValueError(f"amp must be in (0, 1], got {self.amp}")
+        # Normalize chip names eagerly: unknown chips fail at config time,
+        # not at the first matmul, and `chip` is always a ChipSpec after
+        # construction.
+        object.__setattr__(self, "chip", hw.get_chip(self.chip))
+
+    @property
+    def chip_spec(self) -> hw.ChipSpec:
+        return self.chip
+
+    def replace(self, **kw) -> "MatmulConfig":
+        return dataclasses.replace(self, **kw)
+
+
+_FIELDS = frozenset(f.name for f in dataclasses.fields(MatmulConfig))
+
+_TLS = threading.local()
+
+
+def _layers() -> list[dict]:
+    stack = getattr(_TLS, "layers", None)
+    if stack is None:
+        stack = _TLS.layers = []
+    return stack
+
+
+def _env_layer() -> dict:
+    backend = os.environ.get(_ENV_BACKEND)
+    return {"backend": backend} if backend else {}
+
+
+def resolve(**explicit) -> MatmulConfig:
+    """Resolve the active config, innermost layer winning field-wise.
+
+    `explicit` carries a call site's kwargs; None values mean "unset, fall
+    through to the context" so wrappers can expose optional kwargs without
+    knowing the defaults.
+    """
+    bad = set(explicit) - _FIELDS
+    if bad:
+        raise TypeError(f"unknown matmul config fields {sorted(bad)}; "
+                        f"known: {sorted(_FIELDS)}")
+    merged = _env_layer()
+    for layer in _layers():
+        merged.update(layer)
+    merged.update({k: v for k, v in explicit.items() if v is not None})
+    return MatmulConfig(**merged)
+
+
+def current() -> MatmulConfig:
+    """The config a kwarg-less matmul would resolve right now."""
+    return resolve()
+
+
+@contextlib.contextmanager
+def mm_config(**overrides) -> Iterator[MatmulConfig]:
+    """Push a configuration layer for the dynamic extent of the block.
+
+    Only the fields named here are overridden; everything else falls
+    through to the enclosing layer (or the env var / defaults).  As in
+    `resolve`, a None value means "unset" — `mm_config(amp=args.amp)`
+    with an unpassed flag is a no-op layer, not an error.  Yields the
+    config as resolved at entry, mostly for logging:
+
+        with mm_config(amp=0.3, chip="ipu_gc200") as cfg:
+            print(cfg.chip.name)
+    """
+    bad = set(overrides) - _FIELDS
+    if bad:
+        raise TypeError(f"unknown matmul config fields {sorted(bad)}; "
+                        f"known: {sorted(_FIELDS)}")
+    layers = _layers()
+    layers.append({k: v for k, v in overrides.items() if v is not None})
+    try:
+        yield resolve()           # validates the merged config eagerly
+    finally:
+        layers.pop()
+
+
+@contextlib.contextmanager
+def scope(cfg: MatmulConfig | None) -> Iterator[MatmulConfig | None]:
+    """Run a block under a pre-built MatmulConfig (no-op for None).
+
+    The engine/launcher integration point: callers that accept an optional
+    config object wrap their body in `scope(cfg)` instead of threading it
+    into every matmul call.  Fields the config leaves as None (out_dtype /
+    interpret auto) fall through to any enclosing layer.
+    """
+    if cfg is None:
+        yield None
+        return
+    fields = dataclasses.asdict(cfg)
+    # asdict recurses into the ChipSpec; keep the spec object itself.
+    fields["chip"] = cfg.chip
+    with mm_config(**fields) as resolved:
+        yield resolved
+
+
+# ------------------------------------------------------------------- CLI
+def add_cli_args(ap) -> None:
+    """Attach the shared matmul-config flags to an argparse parser.
+
+    Used by every launcher (train / serve / dryrun / costprobe) and the
+    benchmark harness so the session-scoped knobs are spelled identically
+    everywhere.
+    """
+    ap.add_argument("--amp", type=float, default=None,
+                    help="availableMemoryProportion analogue in (0, 1]")
+    ap.add_argument("--chip", default=None,
+                    help=f"chip to plan for: {', '.join(hw.list_chips())}")
+    ap.add_argument("--mm-backend", default=None, choices=BACKENDS,
+                    help="matmul backend (default: env var, then xla)")
+    ap.add_argument("--plan-mode", default=None, choices=PLAN_MODES,
+                    help="planner search mode")
+
+
+def scope_from_args(args):
+    """mm_config(...) layer built from `add_cli_args` flags (unpassed
+    flags are None and therefore fall through)."""
+    return mm_config(amp=getattr(args, "amp", None),
+                     chip=getattr(args, "chip", None),
+                     backend=getattr(args, "mm_backend", None),
+                     plan_mode=getattr(args, "plan_mode", None))

@@ -1,0 +1,196 @@
+"""Structured fused-epilogue spec for the planned matmul.
+
+`Epilogue` replaces the underscore-joined token strings ("bias_gelu",
+"silu_residual", ...) with a dataclass that carries its own operands and
+validates itself once, so the XLA backend, the Pallas kernels and the jnp
+oracle all consume the same object and fail the same way.
+
+The op vocabulary lives in ONE table (`EPILOGUE_OPS`, applied in that
+order): adding a new op means adding one entry here plus one field on
+`Epilogue` — no per-backend call-site edits.  `scale` is the first such
+addition beyond the original token set: a *static* scalar multiplier
+applied to the raw product before bias/activation (useful for muP-style
+output scaling and attention 1/sqrt(d) folding), which being static needs
+no new kernel operand plumbing.
+
+Semantics (all at fp32 accumulator width, one cast at the end):
+
+    out = act(scale * (A @ B) + bias) + residual
+
+String specs keep working through `Epilogue.parse("bias_gelu", bias=...)`,
+which is also where operand-presence validation happens: naming an op whose
+operand was not passed raises `ValueError` (never a bare `assert`, so the
+check survives `python -O`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# One entry per epilogue op, in application order.
+#   name -> (needs_value, fn(z, value))
+# `needs_value` ops consume either a static scalar (scale) or an array
+# operand (bias, residual); activations ignore the value slot.  Array
+# operands are cast to fp32 by `apply_spec` before the op runs.
+EPILOGUE_OPS: dict[str, tuple[bool, Any]] = {
+    "scale": (True, lambda z, v: z * v),
+    "bias": (True, lambda z, v: z + v),
+    "gelu": (False, lambda z, v: jax.nn.gelu(z)),
+    "silu": (False, lambda z, v: jax.nn.silu(z)),
+    "residual": (True, lambda z, v: z + v),
+}
+
+EPILOGUE_TOKENS = tuple(EPILOGUE_OPS)
+ACTIVATIONS = ("gelu", "silu")
+
+# Ops whose value is a static python scalar (part of the jit-static spec)
+# rather than a traced array operand.
+_STATIC_OPS = ("scale",)
+
+
+def _validate_tokens(tokens: tuple[str, ...], label: str) -> None:
+    bad = [t for t in tokens if t not in EPILOGUE_OPS]
+    if bad or len(set(tokens)) != len(tokens):
+        raise ValueError(f"bad epilogue spec {label!r}; tokens must be "
+                         f"unique and from {EPILOGUE_TOKENS}")
+    if sum(t in ACTIVATIONS for t in tokens) > 1:
+        raise ValueError(f"epilogue {label!r} names two activations")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Epilogue:
+    """A fused epilogue with its operands attached.
+
+    `bias` is a (n,) vector, `residual` broadcast-matches the output,
+    `scale` is a static python scalar, `act` one of ACTIVATIONS.  An op is
+    "named" iff its field is set, so operand-presence bugs are impossible
+    by construction; `Epilogue.parse` recreates the old string surface and
+    raises ValueError when a named op is missing its operand.
+    """
+
+    act: str | None = None
+    scale: float | None = None
+    bias: jax.Array | None = None
+    residual: jax.Array | None = None
+
+    def __post_init__(self):
+        if self.act is not None and self.act not in ACTIVATIONS:
+            raise ValueError(f"unknown activation {self.act!r}; "
+                             f"must be one of {ACTIVATIONS}")
+        if self.scale is not None:
+            object.__setattr__(self, "scale", float(self.scale))
+
+    # ------------------------------------------------------------- views
+    @property
+    def tokens(self) -> tuple[str, ...]:
+        """Named ops in application order (the legacy token tuple)."""
+        out = []
+        for name in EPILOGUE_OPS:
+            if name in ACTIVATIONS:
+                if self.act == name:
+                    out.append(name)
+            elif getattr(self, name) is not None:
+                out.append(name)
+        return tuple(out)
+
+    @property
+    def spec(self) -> tuple[tuple[str, float | None], ...]:
+        """Hashable jit-static description: ((token, static_value), ...).
+
+        Array operands travel separately (they are traced values); static
+        scalars ride inside the spec so the kernel can close over them.
+        """
+        return tuple((t, self.scale if t in _STATIC_OPS else None)
+                     for t in self.tokens)
+
+    def __bool__(self) -> bool:
+        return bool(self.tokens)
+
+    def operands(self) -> dict[str, jax.Array]:
+        """Array operands keyed by op name (what the kernel streams in)."""
+        out = {}
+        if self.bias is not None:
+            out["bias"] = self.bias
+        if self.residual is not None:
+            out["residual"] = self.residual
+        return out
+
+    def replace(self, **kw) -> "Epilogue":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------- parse
+    @classmethod
+    def parse(cls, spec: "Epilogue | str | None", *, bias=None,
+              residual=None, scale=None) -> "Epilogue":
+        """Compat constructor: accept an Epilogue, a token string or None.
+
+        String specs ("bias_gelu", "silu_residual", ...) validate exactly
+        as before, plus the operand-presence check both backends used to
+        duplicate: naming an op without passing its operand raises
+        ValueError.  Operands passed without being named are ignored (the
+        historical behaviour).  An Epilogue instance passes through
+        unchanged — it carries its own operands (an op is named iff its
+        operand is set), so the separate kwargs are ignored.
+        """
+        if isinstance(spec, Epilogue):
+            return spec
+        if not spec or spec == "none":
+            return cls()
+        if not isinstance(spec, str):
+            raise TypeError(f"epilogue must be an Epilogue, a token string "
+                            f"or None, got {type(spec).__name__}")
+        tokens = tuple(spec.split("_"))
+        _validate_tokens(tokens, spec)
+        kw: dict[str, Any] = {}
+        for t in tokens:
+            if t in ACTIVATIONS:
+                kw["act"] = t
+                continue
+            value = {"bias": bias, "residual": residual,
+                     "scale": scale}[t]
+            if value is None:
+                raise ValueError(
+                    f"epilogue names {t!r} but none was passed")
+            kw[t] = value
+        return cls(**kw)
+
+
+def normalize_spec(epilogue) -> tuple[tuple[str, float | None], ...]:
+    """Kernel-side static-spec normalization.
+
+    Accepts the hashable spec tuple (the fast path from ops.py), a legacy
+    token string, or None.  Validation matches `Epilogue.parse` minus the
+    operand-presence check (the kernel receives operands positionally and
+    asserts its own pre-padded contract).
+    """
+    if epilogue is None or epilogue == "none" or epilogue == ():
+        return ()
+    if isinstance(epilogue, str):
+        tokens = tuple(epilogue.split("_"))
+        _validate_tokens(tokens, epilogue)
+        return tuple((t, None) for t in tokens)
+    tokens = tuple(t for t, _ in epilogue)
+    _validate_tokens(tokens, str(tokens))
+    return tuple(epilogue)
+
+
+def apply_spec(z: jax.Array, spec, operands: dict[str, Any]):
+    """Apply a normalized spec to the fp32 accumulator value `z`.
+
+    `operands` maps op name -> traced value (array or pallas-ref-read);
+    array values are cast to fp32 here so every consumer (XLA backend,
+    kernel flush, jnp oracle) gets identical numerics.
+    """
+    for token, static in normalize_spec(spec):
+        needs_value, fn = EPILOGUE_OPS[token]
+        value = static
+        if needs_value and value is None:
+            value = operands[token]
+            if hasattr(value, "astype"):
+                value = value.astype(jnp.float32)
+        z = fn(z, value)
+    return z

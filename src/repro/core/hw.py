@@ -1,4 +1,4 @@
-"""TPU v5e hardware model constants.
+"""Hardware models + the chip registry.
 
 These are the roofline constants mandated for this reproduction:
   197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -6,6 +6,12 @@ These are the roofline constants mandated for this reproduction:
 The IPU paper's analogues (GC200): 62.5 TFLOP/s fp32, 918 MB on-chip SRAM,
 47.5 TB/s aggregate SRAM bandwidth, 350 GB/s inter-chip.  See DESIGN.md §2
 for the adaptation table.
+
+Chips live in a name registry (`register_chip` / `get_chip` / `list_chips`)
+so every API that takes a `ChipSpec` also takes a registered name string —
+the cross-device comparison the paper runs (IPU GC200 vs RTX 2080 Ti) is
+then a config/CLI axis (`mm_config(chip="ipu_gc200")`, `--chip gpu_a30`)
+rather than an import.  Out-of-tree chips register the same way.
 """
 
 from __future__ import annotations
@@ -30,7 +36,41 @@ class ChipSpec:
     grid_step_overhead_s: float = 120e-9
 
 
-TPU_V5E = ChipSpec(
+# ----------------------------------------------------------------- registry
+_CHIPS: dict[str, ChipSpec] = {}
+
+
+def register_chip(spec: ChipSpec, *, aliases: tuple[str, ...] = ()
+                  ) -> ChipSpec:
+    """Register a chip under its name (+ optional aliases), return it.
+
+    Re-registering a name replaces the entry (latest wins), so downstream
+    users can shadow a built-in spec with corrected numbers.
+    """
+    for name in (spec.name, *aliases):
+        _CHIPS[name.lower()] = spec
+    return spec
+
+
+def get_chip(chip: ChipSpec | str) -> ChipSpec:
+    """Resolve a chip argument: ChipSpec passes through, str is looked up."""
+    if isinstance(chip, ChipSpec):
+        return chip
+    if isinstance(chip, str):
+        try:
+            return _CHIPS[chip.lower()]
+        except KeyError:
+            raise KeyError(f"unknown chip {chip!r}; registered chips: "
+                           f"{list_chips()}") from None
+    raise TypeError(f"chip must be a ChipSpec or a registered name, "
+                    f"got {type(chip).__name__}")
+
+
+def list_chips() -> list[str]:
+    return sorted(_CHIPS)
+
+
+TPU_V5E = register_chip(ChipSpec(
     name="tpu_v5e",
     peak_bf16_flops=197e12,
     peak_fp32_flops=197e12 / 4,   # bf16x3-style emulation; fp32 is not MXU-native
@@ -39,10 +79,10 @@ TPU_V5E = ChipSpec(
     # Conservative usable VMEM figure; the planner only ever claims
     # amp * vmem_bytes of it (AMP = the paper's availableMemoryProportion knob).
     vmem_bytes=64 * 1024**2,
-)
+), aliases=("v5e",))
 
 # The paper's chips, kept for the comparison benchmarks (modeled numbers).
-IPU_GC200 = ChipSpec(
+IPU_GC200 = register_chip(ChipSpec(
     name="ipu_gc200",
     peak_bf16_flops=62.5e12,     # GC200 quotes fp16.16 AMP peak ~250; fp32 62.5
     peak_fp32_flops=62.5e12,
@@ -50,19 +90,38 @@ IPU_GC200 = ChipSpec(
     ici_bw_per_link=350e9 / 4,
     vmem_bytes=918 * 1024**2,    # all memory is on-chip
     grid_step_overhead_s=600e-9, # vertex scheduling is costlier on Poplar
-)
+), aliases=("gc200",))
 
-GPU_A30 = ChipSpec(
+GPU_A30 = register_chip(ChipSpec(
     name="gpu_a30",
     peak_bf16_flops=165e12,
     peak_fp32_flops=10.3e12,
     hbm_bw=933e9,
     ici_bw_per_link=200e9 / 4,
-    vmem_bytes=164 * 1024,       # shared memory per SM — not comparable; unused
+    # Planner-visible fast memory on a GPU is the L2 (24 MB on GA100-class
+    # A30): blocks that fit amp * L2 stream from HBM once, like the
+    # VMEM-resident blocks they model.
+    vmem_bytes=24 * 1024**2,
     grid_step_overhead_s=0.0,
-)
+), aliases=("a30",))
+
+# The paper's GPU baseline for the skew comparison (Fig. 5): turing-class
+# RTX 2080 Ti — 13.45 TFLOP/s fp32, 107 TFLOP/s fp16 tensor-core peak,
+# 616 GB/s GDDR6, 5.5 MB L2, 11 GB device memory.
+GPU_RTX2080TI = register_chip(ChipSpec(
+    name="gpu_rtx2080ti",
+    peak_bf16_flops=107e12,
+    peak_fp32_flops=13.45e12,
+    hbm_bw=616e9,
+    ici_bw_per_link=100e9 / 4,   # NVLink2 bridge ~100 GB/s aggregate;
+                                 # per-link = aggregate/4 (repo convention)
+    vmem_bytes=int(5.5 * 1024**2),
+    hbm_bytes=11 * 1024**3,
+    grid_step_overhead_s=0.0,
+), aliases=("rtx2080ti", "rtx_2080ti"))
 
 
-def peak_flops(chip: ChipSpec, dtype_bytes: int) -> float:
+def peak_flops(chip: ChipSpec | str, dtype_bytes: int) -> float:
     """Peak matmul FLOP/s for an element width (2 = bf16, 4 = fp32)."""
+    chip = get_chip(chip)
     return chip.peak_bf16_flops if dtype_bytes <= 2 else chip.peak_fp32_flops

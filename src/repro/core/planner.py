@@ -31,7 +31,7 @@ import functools
 import math
 from typing import Iterable
 
-from repro.core import hw
+from repro.core import config, hw
 from repro.core.costmodel import (SCHEDULES, BlockPlan, MatmulCost,
                                   MatmulDims, cost_matmul)
 
@@ -87,11 +87,15 @@ def _search(d: MatmulDims, chip: hw.ChipSpec, budget: int,
     return best
 
 
-@functools.lru_cache(maxsize=4096)
 def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
-                amp: float = 0.45, chip: hw.ChipSpec = hw.TPU_V5E,
-                mode: str = "skew_aware", batch: int = 1) -> MatmulCost:
+                amp: float | None = None, chip: hw.ChipSpec | str | None = None,
+                mode: str | None = None, batch: int = 1) -> MatmulCost:
     """Choose a (schedule, block shape) plan for A[batch, m, k] @ B[k, n].
+
+    amp / chip / mode left as None resolve through the active `mm_config`
+    context stack (defaults: 0.45 / tpu_v5e / "skew_aware"), so a whole
+    region of planning re-targets with one `with mm_config(...)` block.
+    `chip` also accepts a registered name string ("ipu_gc200", ...).
 
     mode:
       "skew_aware" — full (schedule x block) search, the paper-adapted
@@ -103,6 +107,16 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
       "naive"      — fixed 512^3-ish square blocks clipped to the problem,
                      the baseline whose skew collapse we reproduce.
     """
+    cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
+    return _plan_matmul_cached(m, k, n, dtype_bytes=dtype_bytes,
+                               amp=cfg.amp, chip=cfg.chip_spec,
+                               mode=cfg.plan_mode, batch=batch)
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_matmul_cached(m: int, k: int, n: int, *, dtype_bytes: int,
+                        amp: float, chip: hw.ChipSpec, mode: str,
+                        batch: int) -> MatmulCost:
     d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
     budget = int(amp * chip.vmem_bytes)
 
@@ -150,7 +164,8 @@ def _clip_plan(p: BlockPlan, d: MatmulDims, chip: hw.ChipSpec,
 
 def sweep_aspect_ratios(total_elems: int, ratios: Iterable[float],
                         n_out: int = 4096, *, dtype_bytes: int = 2,
-                        amp: float = 0.45, chip: hw.ChipSpec = hw.TPU_V5E,
+                        amp: float | None = None,
+                        chip: hw.ChipSpec | str | None = None,
                         vary: str = "a_aspect") -> list[dict]:
     """Paper Fig.5 sweep, in two families.
 
@@ -168,7 +183,13 @@ def sweep_aspect_ratios(total_elems: int, ratios: Iterable[float],
 
     Returns one record per ratio with naive, single-schedule (K-inner-only)
     and schedule-diverse planned roofline fractions plus the chosen schedule.
+    amp / chip left as None resolve through the `mm_config` context stack,
+    so ``with mm_config(chip="ipu_gc200"): sweep_aspect_ratios(...)``
+    reproduces the sweep on the paper's chip; each record carries the chip
+    it was planned for.
     """
+    cfg = config.resolve(amp=amp, chip=chip)
+    amp, chip = cfg.amp, cfg.chip_spec
     out = []
     for r in ratios:
         if vary == "output":
@@ -184,7 +205,7 @@ def sweep_aspect_ratios(total_elems: int, ratios: Iterable[float],
         single = plan_matmul(m, k, n, mode="k_inner", **kw)
         planned = plan_matmul(m, k, n, mode="skew_aware", **kw)
         out.append(dict(
-            ratio=r, m=m, k=k, n=n,
+            chip=chip.name, ratio=r, m=m, k=k, n=n,
             naive_fraction=naive.roofline_fraction(chip),
             single_fraction=single.roofline_fraction(chip),
             planned_fraction=planned.roofline_fraction(chip),

@@ -12,60 +12,80 @@ the paper's mechanism made explicit) and dispatches to one of two backends:
     for full-model dry-runs (XLA's own tiling then applies; the plan is still
     computed and logged so the roofline analysis can compare).
 
-Backend resolution: explicit argument > REPRO_MM_BACKEND env var > "xla".
-(`REPRO_MM_BACKEND=pallas` routes the whole model zoo through the kernels.)
+Configuration is *context-scoped* (repro.core.config), mirroring Poplar's
+session-scoped engine options: `backend`, `amp`, `chip`, `plan_mode`,
+`out_dtype` and `interpret` resolve through the `mm_config` stack —
 
-Fused epilogues: `matmul(..., epilogue="bias_gelu", bias=..., residual=...)`
-fuses ``act(a@b + bias) + residual`` into the kernel's last-K flush (the XLA
-backend applies the same math at fp32 before the output cast, so both
-backends are numerically aligned).  Linear layers route through this so they
-stop paying a separate elementwise HBM pass.
+    with mm_config(amp=0.3, chip="ipu_gc200", backend="pallas"):
+        logits = model(params, batch)     # every matmul re-planned
+
+— with explicit per-call kwargs as the innermost layer and the
+REPRO_MM_BACKEND env var as the outermost.
+
+Fused epilogues are *structured* (repro.core.epilogue): pass an
+``Epilogue(bias=..., act="gelu", residual=..., scale=...)`` carrying its own
+operands, or keep the legacy string surface
+(``matmul(..., epilogue="bias_gelu", bias=...)``) which routes through
+`Epilogue.parse`.  Both backends fuse ``act(scale * (a@b) + bias) +
+residual`` at fp32 accumulator width, so they stay numerically aligned.
 
 Plan capture: wrap a region in ``with plan_capture() as log:`` to collect the
 `MatmulCost` of every matmul traced inside it without mutating global state
-(captures nest).  `enable_plan_log` / `plan_log` remain as thin shims over a
-process-global capture for legacy callers.
+(captures nest).  Non-(…mk,kn) contractions issued through `einsum_mm` log an
+`UnplannedContraction` marker so the captured workload is complete.
+`enable_plan_log` / `plan_log` remain as thin shims over a process-global
+capture for legacy callers.
 """
 
 from __future__ import annotations
 
 import contextlib
-import os
+import dataclasses
 from functools import partial
 from typing import Iterator
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import hw
+from repro.core import config, epilogue as epilogue_mod, hw
+from repro.core.config import MatmulConfig, mm_config  # noqa: F401  (re-export)
 from repro.core.costmodel import MatmulCost
+from repro.core.epilogue import Epilogue  # noqa: F401  (re-export)
 from repro.core.planner import plan_matmul
 
-_ACTIVE_LOGS: list[list[MatmulCost]] = []
-_LEGACY_LOG: list[MatmulCost] = []
+_ACTIVE_LOGS: list[list] = []
+_LEGACY_LOG: list = []
 
-EPILOGUE_TOKENS = ("bias", "gelu", "silu", "residual")
+# Legacy token vocabulary, re-exported for callers of the string surface.
+EPILOGUE_TOKENS = epilogue_mod.EPILOGUE_TOKENS
 
 
 def parse_epilogue(epilogue: str | None) -> tuple[str, ...]:
-    """Validate an epilogue spec ("bias_gelu", "silu_residual", ...).
+    """Legacy shim: validate a token-string spec, return its tokens.
 
-    Shared by both backends and the kernels so an invalid spec fails the
-    same way everywhere.
+    The structured path is `Epilogue.parse` (which also checks operand
+    presence); this keeps the old call surface for kernel-level users.
     """
-    if not epilogue or epilogue == "none":
-        return ()
-    tokens = tuple(epilogue.split("_"))
-    bad = [t for t in tokens if t not in EPILOGUE_TOKENS]
-    if bad or len(set(tokens)) != len(tokens):
-        raise ValueError(f"bad epilogue spec {epilogue!r}; tokens must be "
-                         f"unique and from {EPILOGUE_TOKENS}")
-    if "gelu" in tokens and "silu" in tokens:
-        raise ValueError(f"epilogue {epilogue!r} names two activations")
-    return tokens
+    return tuple(t for t, _ in epilogue_mod.normalize_spec(epilogue))
 
 
-def _deregister_log(log: list[MatmulCost]) -> None:
+@dataclasses.dataclass(frozen=True)
+class UnplannedContraction:
+    """Plan-log marker for a contraction the planner did not decompose.
+
+    `einsum_mm` records one of these per call so `plan_capture()` still
+    sees the full workload: consumers that aggregate `MatmulCost` entries
+    should filter on isinstance, and can surface these as the "unplanned
+    residue" of a model (ideally empty).
+    """
+
+    spec: str
+    a_shape: tuple[int, ...]
+    b_shape: tuple[int, ...]
+    dtype_bytes: int
+
+
+def _deregister_log(log: list) -> None:
     # identity-based removal: lists compare by value, so `.remove()` could
     # drop a different (equal-content, e.g. empty) capture.
     for i, entry in enumerate(_ACTIVE_LOGS):
@@ -75,9 +95,9 @@ def _deregister_log(log: list[MatmulCost]) -> None:
 
 
 @contextlib.contextmanager
-def plan_capture() -> Iterator[list[MatmulCost]]:
+def plan_capture() -> Iterator[list]:
     """Collect the plan of every matmul traced inside the block."""
-    log: list[MatmulCost] = []
+    log: list = []
     _ACTIVE_LOGS.append(log)
     try:
         yield log
@@ -95,32 +115,32 @@ def enable_plan_log(enabled: bool = True) -> None:
         _deregister_log(_LEGACY_LOG)
 
 
-def plan_log() -> list[MatmulCost]:
+def plan_log() -> list:
     return list(_LEGACY_LOG)
 
 
-def _record(cost: MatmulCost) -> None:
+def _record(cost) -> None:
     for log in _ACTIVE_LOGS:
         log.append(cost)
 
 
-def _resolve_backend(backend: str | None) -> str:
-    if backend is not None:
-        return backend
-    return os.environ.get("REPRO_MM_BACKEND", "xla")
-
-
 def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
-           amp: float = 0.45, plan_mode: str = "skew_aware",
-           chip: hw.ChipSpec = hw.TPU_V5E,
-           epilogue: str | None = None, bias: jax.Array | None = None,
+           amp: float | None = None, plan_mode: str | None = None,
+           chip: hw.ChipSpec | str | None = None,
+           epilogue: Epilogue | str | None = None,
+           bias: jax.Array | None = None,
            residual: jax.Array | None = None,
-           out_dtype: jnp.dtype | None = None) -> jax.Array:
+           out_dtype: jnp.dtype | None = None,
+           interpret: bool | None = None) -> jax.Array:
     """C[..., m, n] = epilogue(A[..., m, k] @ B[k, n]), skew-planned.
 
     Leading batch dims of `a` either fold into m or ride in the grid as a
-    batched-grid plan — the planner weighs the padding both ways.  `residual`
-    must broadcast-match the output shape; `bias` is a (n,) vector.
+    batched-grid plan — the planner weighs the padding both ways.  All
+    config kwargs default to the active `mm_config` context (see module
+    docstring); `chip` accepts a registered name string.  `epilogue` is an
+    `Epilogue` object or a legacy token string (operands via bias= /
+    residual=, with `residual` broadcast-matching the output shape and
+    `bias` a (n,) vector).
     """
     if b.ndim != 2:
         raise ValueError(f"rhs must be 2-D (weights), got {b.shape}")
@@ -129,48 +149,47 @@ def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
     if k != k2:
         raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
 
+    cfg = config.resolve(backend=backend, amp=amp, plan_mode=plan_mode,
+                         chip=chip, out_dtype=out_dtype, interpret=interpret)
+    # One validation point for both backends: operand-presence and token
+    # errors raise ValueError here (never a bare assert).
+    ep = Epilogue.parse(epilogue, bias=bias, residual=residual)
+
     batch = 1
     for s in lead:
         batch *= s
     dtype_bytes = jnp.dtype(a.dtype).itemsize
-    cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp,
-                       chip=chip, mode=plan_mode, batch=batch)
+    cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                       chip=cfg.chip_spec, mode=cfg.plan_mode, batch=batch)
     _record(cost)
 
-    out_dtype = out_dtype or a.dtype
-    resolved = _resolve_backend(backend)
-    if resolved == "pallas":
+    out_dtype = cfg.out_dtype or a.dtype
+    if cfg.backend == "pallas":
         from repro.kernels import ops  # lazy: kernels import pallas
-        kw = dict(plan=cost.plan, epilogue=epilogue, bias=bias,
-                  out_dtype=out_dtype)
+        kw = dict(plan=cost.plan, out_dtype=out_dtype,
+                  interpret=cfg.interpret)
+        res = ep.residual
         if cost.plan.batch_grid and lead:
             a3 = a.reshape(batch, m, k)
-            res = None if residual is None else \
-                jnp.broadcast_to(residual, (*lead, m, n)).reshape(batch, m, n)
-            out = ops.skew_matmul_batched(a3, b, residual=res, **kw)
+            if res is not None:
+                res = jnp.broadcast_to(res, (*lead, m, n)).reshape(
+                    batch, m, n)
+            out = ops.skew_matmul_batched(a3, b,
+                                          epilogue=ep.replace(residual=res),
+                                          **kw)
         else:
             a2 = a.reshape(batch * m, k)
-            res = None if residual is None else \
-                jnp.broadcast_to(residual, (*lead, m, n)).reshape(batch * m, n)
-            out = ops.skew_matmul(a2, b, residual=res, **kw)
+            if res is not None:
+                res = jnp.broadcast_to(res, (*lead, m, n)).reshape(
+                    batch * m, n)
+            out = ops.skew_matmul(a2, b, epilogue=ep.replace(residual=res),
+                                  **kw)
         return out.reshape(*lead, m, n)
     # XLA backend: fp32 accumulation + fp32 epilogue to match the kernel.
     z = jax.lax.dot_general(
         a, b, (((a.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
-    tokens = parse_epilogue(epilogue)
-    assert bias is not None or "bias" not in tokens, (
-        "epilogue names 'bias' but none was passed")
-    assert residual is not None or "residual" not in tokens, (
-        "epilogue names 'residual' but none was passed")
-    if "bias" in tokens:
-        z = z + bias.astype(jnp.float32)
-    if "gelu" in tokens:
-        z = jax.nn.gelu(z)
-    elif "silu" in tokens:
-        z = jax.nn.silu(z)
-    if "residual" in tokens:
-        z = z + residual.astype(jnp.float32)
+    z = epilogue_mod.apply_spec(z, ep.spec, ep.operands())
     return z.astype(out_dtype)
 
 
@@ -178,8 +197,14 @@ def einsum_mm(spec: str, a: jax.Array, b: jax.Array, **kw) -> jax.Array:
     """einsum wrapper for the handful of non-(…mk,kn) contractions.
 
     Falls back to jnp.einsum with f32 accumulation; exists so models have a
-    single import site for all contractions and the plan log stays complete.
+    single import site for all contractions and the plan log stays
+    complete: each call records an `UnplannedContraction` marker so
+    `plan_capture()` sees the full workload even where the planner has no
+    decomposition to offer.
     """
+    _record(UnplannedContraction(
+        spec=spec, a_shape=tuple(a.shape), b_shape=tuple(b.shape),
+        dtype_bytes=jnp.dtype(a.dtype).itemsize))
     return jnp.einsum(spec, a, b,
                       preferred_element_type=jnp.float32).astype(a.dtype)
 

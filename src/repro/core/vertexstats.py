@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import hw
+from repro.core import config, hw
 from repro.core.costmodel import MatmulCost, MatmulDims
 from repro.core.planner import plan_matmul
 
@@ -35,10 +35,14 @@ class VertexStats:
 
 
 def stats_for(m: int, k: int, n: int, *, dtype_bytes: int = 2,
-              amp: float = 0.45, mode: str = "skew_aware",
-              chip: hw.ChipSpec = hw.TPU_V5E) -> VertexStats:
-    cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp, chip=chip,
-                       mode=mode)
+              amp: float | None = None, mode: str | None = None,
+              chip: hw.ChipSpec | str | None = None) -> VertexStats:
+    """amp / mode / chip left as None resolve through the mm_config stack;
+    `chip` also accepts a registered name string."""
+    cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
+    chip = cfg.chip_spec
+    cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                       chip=chip, mode=cfg.plan_mode)
     d = MatmulDims(m, k, n, dtype_bytes=dtype_bytes)
     return VertexStats(
         dims=(m, k, n), skew=d.skew,
@@ -52,7 +56,7 @@ def stats_for(m: int, k: int, n: int, *, dtype_bytes: int = 2,
 
 def paper_vertex_table(n_out: int = 4096, total: int = 4096 * 4096,
                        skews: tuple[float, ...] = (16.0, 1.0, 1 / 16.0),
-                       mode: str = "naive") -> list[VertexStats]:
+                       mode: str | None = "naive") -> list[VertexStats]:
     """Reproduce the paper's three-way vertex comparison (L / S / R skew).
 
     Paper semantics: A's aspect ratio m/contraction is varied at constant A

@@ -3,10 +3,12 @@
 skew_matmul      — THE paper kernel: planner-controlled blocked matmul,
                    now a *schedule family* (k_inner / a_resident /
                    b_resident loop orders + a batched-grid variant) with
-                   fused epilogues (bias, gelu/silu, residual) applied at
-                   the last-K flush.  The planner picks the schedule per
-                   shape; set REPRO_MM_BACKEND=pallas to route the model
-                   zoo's matmuls through it.
+                   structured fused epilogues (core.epilogue.Epilogue:
+                   scale, bias, gelu/silu, residual) applied at the last-K
+                   flush.  The planner picks the schedule per shape; route
+                   the model zoo's matmuls through it session-wide with
+                   ``with mm_config(backend="pallas"):`` (or the
+                   REPRO_MM_BACKEND=pallas env var).
 flash_attention  — causal/local/softcap blockwise attention (GQA-aware)
 ssd_scan         — Mamba-2 SSD chunked scan
 rglru_scan       — RG-LRU gated linear recurrence

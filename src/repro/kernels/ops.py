@@ -2,7 +2,13 @@
 
 All wrappers: (1) default to interpret mode off-TPU so CPU tests exercise the
 kernel bodies, (2) handle padding to block multiples and slice back, (3) take
-plans from the skew-aware planner when not given explicitly.
+plans from the skew-aware planner when not given explicitly, resolving the
+planning knobs (amp / chip) and `interpret` through the `mm_config` context
+stack — so a wrapper called under ``with mm_config(chip="ipu_gc200"):``
+fallback-plans against GC200's SRAM budget, not the TPU default.
+
+The matmul wrappers accept a structured `Epilogue` (with operands attached)
+or the legacy ``epilogue="bias_gelu", bias=...`` string surface.
 """
 
 from __future__ import annotations
@@ -10,7 +16,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import config
 from repro.core.costmodel import BlockPlan
+from repro.core.epilogue import Epilogue
 from repro.core.planner import plan_matmul
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rglru
@@ -33,39 +41,47 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
 
 
 def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
-                amp: float = 0.45, epilogue: str | None = None,
+                amp: float | None = None, chip=None,
+                epilogue: Epilogue | str | None = None,
                 bias: jax.Array | None = None,
                 residual: jax.Array | None = None, out_dtype=None,
                 interpret: bool | None = None) -> jax.Array:
     """Planned blocked matmul.  a (m, k) @ b (k, n) -> (m, n).
 
     The plan's `schedule` field selects the kernel loop order (k_inner /
-    a_resident / b_resident).  `epilogue` fuses ``act(a@b + bias) + residual``
-    into the last-K flush; see kernels.skew_matmul for the token spec.
+    a_resident / b_resident).  When no plan is given, fallback planning
+    resolves amp / chip through the `mm_config` stack (so the plan targets
+    the caller's chip, not a hardcoded TPU default).  `epilogue` fuses
+    ``act(scale * (a@b) + bias) + residual`` into the last-K flush; pass an
+    `Epilogue` or the legacy token string.
     """
     m, k = a.shape
     _, n = b.shape
+    cfg = config.resolve(amp=amp, chip=chip, interpret=interpret)
+    ep = Epilogue.parse(epilogue, bias=bias, residual=residual)
     if plan is None:
         dtype_bytes = jnp.dtype(a.dtype).itemsize
-        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp).plan
-    interpret = (not _on_tpu()) if interpret is None else interpret
+        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                           chip=cfg.chip_spec).plan
+    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
     bm = min(plan.bm, -(-m // 8) * 8)
     bk = min(plan.bk, -(-k // 128) * 128)
     bn = min(plan.bn, -(-n // 128) * 128)
     ap = _pad_to(a, (bm, bk))
     bp = _pad_to(b, (bk, bn))
-    biasp = None if bias is None else _pad_to(bias, (bn,))
-    resp = None if residual is None else _pad_to(residual, (bm, bn))
+    biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
+    resp = None if ep.residual is None else _pad_to(ep.residual, (bm, bn))
     out = _mm.skew_matmul_padded(ap, bp, biasp, resp, bm=bm, bk=bk, bn=bn,
-                                 schedule=plan.schedule, epilogue=epilogue,
+                                 schedule=plan.schedule, epilogue=ep.spec,
                                  out_dtype=out_dtype or a.dtype,
                                  interpret=interpret)
     return out[:m, :n]
 
 
 def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
-                        plan: BlockPlan | None = None, amp: float = 0.45,
-                        epilogue: str | None = None,
+                        plan: BlockPlan | None = None,
+                        amp: float | None = None, chip=None,
+                        epilogue: Epilogue | str | None = None,
                         bias: jax.Array | None = None,
                         residual: jax.Array | None = None, out_dtype=None,
                         interpret: bool | None = None) -> jax.Array:
@@ -76,20 +92,22 @@ def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
     """
     nb, m, k = a.shape
     _, n = b.shape
+    cfg = config.resolve(amp=amp, chip=chip, interpret=interpret)
+    ep = Epilogue.parse(epilogue, bias=bias, residual=residual)
     if plan is None:
         dtype_bytes = jnp.dtype(a.dtype).itemsize
-        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=amp,
-                           batch=nb).plan
-    interpret = (not _on_tpu()) if interpret is None else interpret
+        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                           chip=cfg.chip_spec, batch=nb).plan
+    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
     bm = min(plan.bm, -(-m // 8) * 8)
     bk = min(plan.bk, -(-k // 128) * 128)
     bn = min(plan.bn, -(-n // 128) * 128)
     ap = _pad_to(a, (1, bm, bk))
     bp = _pad_to(b, (bk, bn))
-    biasp = None if bias is None else _pad_to(bias, (bn,))
-    resp = None if residual is None else _pad_to(residual, (1, bm, bn))
+    biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
+    resp = None if ep.residual is None else _pad_to(ep.residual, (1, bm, bn))
     out = _mm.skew_matmul_batched_padded(ap, bp, biasp, resp, bm=bm, bk=bk,
-                                         bn=bn, epilogue=epilogue,
+                                         bn=bn, epilogue=ep.spec,
                                          out_dtype=out_dtype or a.dtype,
                                          interpret=interpret)
     return out[:, :m, :n]

@@ -12,24 +12,21 @@ def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
 
 
 def matmul_epilogue_ref(a: jax.Array, b: jax.Array, *, bias=None,
-                        residual=None, epilogue: str | None = None,
+                        residual=None, epilogue=None,
                         out_dtype=None) -> jax.Array:
-    """Oracle for the fused-epilogue matmul: out = act(A@B + bias) + residual.
+    """Oracle for the fused-epilogue matmul:
+    out = act(scale * (A@B) + bias) + residual.
 
-    Matches kernel semantics: the whole epilogue is evaluated at fp32
-    accumulator width, then cast once to the output dtype.  Supports leading
-    batch dims on `a` (and `residual`) with a shared 2-D `b`.
+    Matches kernel semantics by construction: it applies the SAME op table
+    (repro.core.epilogue) at fp32 accumulator width, then casts once to the
+    output dtype.  Accepts an `Epilogue`, a token string (operands via
+    bias= / residual=) or None.  Supports leading batch dims on `a` (and
+    `residual`) with a shared 2-D `b`.
     """
-    tokens = epilogue.split("_") if epilogue and epilogue != "none" else []
+    from repro.core import epilogue as epilogue_mod
+    ep = epilogue_mod.Epilogue.parse(epilogue, bias=bias, residual=residual)
     z = jnp.matmul(a, b, preferred_element_type=jnp.float32)
-    if "bias" in tokens:
-        z = z + bias.astype(jnp.float32)
-    if "gelu" in tokens:
-        z = jax.nn.gelu(z)
-    elif "silu" in tokens:
-        z = jax.nn.silu(z)
-    if "residual" in tokens:
-        z = z + residual.astype(jnp.float32)
+    z = epilogue_mod.apply_spec(z, ep.spec, ep.operands())
     return z.astype(out_dtype or a.dtype)
 
 

@@ -27,13 +27,17 @@ operand is re-streamed and which stays VMEM-resident):
   m — the planner selects it when folding would straddle batch boundaries
   with badly padded row blocks.
 
-Fused epilogues: every schedule can fuse ``out = act(acc + bias) + residual``
-into the last-K flush (act in {gelu, silu}), so linear layers stop paying a
-separate elementwise HBM pass.  ``epilogue`` is an underscore-joined token
-string, e.g. "bias_gelu" or "silu_residual"; the bias / residual operands
-must be passed iff named.  For the resident schedules with gk > 1 the kernel
-accumulates through an fp32 output which is cast back to ``out_dtype``
-outside the pallas_call (the cost model charges that extra pass).
+Fused epilogues: every schedule can fuse ``out = act(scale * acc + bias) +
+residual`` into the last-K flush (act in {gelu, silu}), so linear layers
+stop paying a separate elementwise HBM pass.  ``epilogue`` is a *static
+spec*: the hashable tuple from `Epilogue.spec` (the structured surface in
+repro.core.epilogue — how ops.py calls in) or a legacy underscore-joined
+token string, e.g. "bias_gelu"; the bias / residual operands must be passed
+iff named.  The op semantics live in ONE table (epilogue.EPILOGUE_OPS)
+shared with the XLA backend and the jnp oracle.  For the resident schedules
+with gk > 1 the kernel accumulates through an fp32 output which is cast
+back to ``out_dtype`` outside the pallas_call (the cost model charges that
+extra pass).
 
 Note on the resident schedules: the output block index recurs
 non-consecutively across the k grid dim, so both the k and inner dims are
@@ -52,26 +56,27 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# The spec parser lives with the dispatch layer so both backends validate
-# identically; re-exported here for kernel-level callers.
-from repro.core.skewmm import parse_epilogue  # noqa: E402
+# The epilogue op table + spec normalization live in core.epilogue so the
+# kernel, the XLA backend and the jnp oracle share one definition.
+from repro.core import epilogue as epilogue_mod
+
+# Legacy re-export for kernel-level callers of the string surface.
+from repro.core.skewmm import parse_epilogue  # noqa: E402, F401
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or \
     getattr(pltpu, "TPUCompilerParams")
 
 
-def _apply_epilogue(z, tokens, bias_ref, res_ref):
-    """out = act(z + bias) + residual, computed at accumulator (f32) width."""
-    if "bias" in tokens:
-        z = z + bias_ref[...].astype(jnp.float32)
-    if "gelu" in tokens:
-        z = jax.nn.gelu(z)
-    elif "silu" in tokens:
-        z = jax.nn.silu(z)
-    if "residual" in tokens:
-        z = z + res_ref[...].astype(jnp.float32)
-    return z
+def _apply_epilogue(z, spec, bias_ref, res_ref):
+    """Apply the static spec at accumulator (f32) width via the shared
+    op table; array operands are read out of their pallas refs here."""
+    operands = {}
+    if bias_ref is not None:
+        operands["bias"] = bias_ref[...]
+    if res_ref is not None:
+        operands["residual"] = res_ref[...]
+    return epilogue_mod.apply_spec(z, spec, operands)
 
 
 def _epilogue_refs(refs, tokens):
@@ -83,8 +88,8 @@ def _epilogue_refs(refs, tokens):
 
 
 # --------------------------------------------------------------- kernel bodies
-def _k_inner_kernel(*refs, tokens: tuple[str, ...], n_k_steps: int,
-                    k_axis: int):
+def _k_inner_kernel(*refs, spec, n_k_steps: int, k_axis: int):
+    tokens = tuple(t for t, _ in spec)
     a_ref, b_ref, *rest = refs
     acc_ref = rest[-1]
     o_ref = rest[-2]
@@ -102,20 +107,21 @@ def _k_inner_kernel(*refs, tokens: tuple[str, ...], n_k_steps: int,
 
     @pl.when(k_step == n_k_steps - 1)
     def _flush():
-        z = _apply_epilogue(acc_ref[...], tokens, bias_ref, res_ref)
+        z = _apply_epilogue(acc_ref[...], spec, bias_ref, res_ref)
         o_ref[...] = z.astype(o_ref.dtype).reshape(o_ref.shape)
 
 
-def _resident_kernel(*refs, tokens: tuple[str, ...], n_k_steps: int):
+def _resident_kernel(*refs, spec, n_k_steps: int):
     """Shared body for a_resident / b_resident: k is the *middle* grid dim,
     so partial products accumulate through the revisited output block."""
+    tokens = tuple(t for t, _ in spec)
     a_ref, b_ref, *rest = refs
     o_ref = rest[-1]
     bias_ref, res_ref = _epilogue_refs(rest[:-1], tokens)
     partial = jnp.dot(a_ref[...], b_ref[...],
                       preferred_element_type=jnp.float32)
     if n_k_steps == 1:
-        z = _apply_epilogue(partial, tokens, bias_ref, res_ref)
+        z = _apply_epilogue(partial, spec, bias_ref, res_ref)
         o_ref[...] = z.astype(o_ref.dtype)
         return
     k_step = pl.program_id(1)
@@ -130,7 +136,7 @@ def _resident_kernel(*refs, tokens: tuple[str, ...], n_k_steps: int):
 
     @pl.when(k_step == n_k_steps - 1)
     def _last():
-        z = _apply_epilogue(o_ref[...] + partial, tokens, bias_ref, res_ref)
+        z = _apply_epilogue(o_ref[...] + partial, spec, bias_ref, res_ref)
         o_ref[...] = z
 
 
@@ -139,17 +145,22 @@ def _resident_kernel(*refs, tokens: tuple[str, ...], n_k_steps: int):
                                              "interpret"))
 def skew_matmul_padded(a: jax.Array, b: jax.Array, bias=None, residual=None,
                        *, bm: int, bk: int, bn: int,
-                       schedule: str = "k_inner", epilogue: str | None = None,
+                       schedule: str = "k_inner", epilogue=None,
                        out_dtype=jnp.float32,
                        interpret: bool = False) -> jax.Array:
-    """C = epilogue(A @ B) where block shapes divide the (pre-padded) dims."""
+    """C = epilogue(A @ B) where block shapes divide the (pre-padded) dims.
+
+    `epilogue` is a static spec: an `Epilogue.spec` tuple or a legacy
+    token string (both hashable, so they key the jit cache).
+    """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
         f"operands must be pre-padded to block multiples: "
         f"{(m, k, n)} vs {(bm, bk, bn)}")
-    tokens = parse_epilogue(epilogue)
+    spec = epilogue_mod.normalize_spec(epilogue)
+    tokens = tuple(t for t, _ in spec)
     gm, gn, gk = m // bm, n // bn, k // bk
 
     operands = [a, b]
@@ -173,7 +184,7 @@ def skew_matmul_padded(a: jax.Array, b: jax.Array, bias=None, residual=None,
         if "residual" in tokens:
             in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
         return pl.pallas_call(
-            functools.partial(_k_inner_kernel, tokens=tokens, n_k_steps=gk,
+            functools.partial(_k_inner_kernel, spec=spec, n_k_steps=gk,
                               k_axis=2),
             grid=grid,
             in_specs=in_specs,
@@ -217,7 +228,7 @@ def skew_matmul_padded(a: jax.Array, b: jax.Array, bias=None, residual=None,
     # gk > 1 accumulates through the output at f32; cast back outside.
     acc_dtype = out_dtype if gk == 1 else jnp.float32
     out = pl.pallas_call(
-        functools.partial(_resident_kernel, tokens=tokens, n_k_steps=gk),
+        functools.partial(_resident_kernel, spec=spec, n_k_steps=gk),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_spec,
@@ -232,7 +243,7 @@ def skew_matmul_padded(a: jax.Array, b: jax.Array, bias=None, residual=None,
                                              "out_dtype", "interpret"))
 def skew_matmul_batched_padded(a: jax.Array, b: jax.Array, bias=None,
                                residual=None, *, bm: int, bk: int, bn: int,
-                               epilogue: str | None = None,
+                               epilogue=None,
                                out_dtype=jnp.float32,
                                interpret: bool = False) -> jax.Array:
     """C[nb] = epilogue(A[nb] @ B): leading batch dim in the grid (K-inner).
@@ -246,7 +257,8 @@ def skew_matmul_batched_padded(a: jax.Array, b: jax.Array, bias=None,
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (
         f"operands must be pre-padded to block multiples: "
         f"{(m, k, n)} vs {(bm, bk, bn)}")
-    tokens = parse_epilogue(epilogue)
+    spec = epilogue_mod.normalize_spec(epilogue)
+    tokens = tuple(t for t, _ in spec)
     gm, gn, gk = m // bm, n // bn, k // bk
 
     operands = [a, b]
@@ -265,7 +277,7 @@ def skew_matmul_batched_padded(a: jax.Array, b: jax.Array, bias=None,
             pl.BlockSpec((1, bm, bn), lambda nb_, i, j, kk: (nb_, i, j)))
 
     return pl.pallas_call(
-        functools.partial(_k_inner_kernel, tokens=tokens, n_k_steps=gk,
+        functools.partial(_k_inner_kernel, spec=spec, n_k_steps=gk,
                           k_axis=3),
         grid=(nb, gm, gn, gk),
         in_specs=in_specs,

@@ -37,8 +37,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import all_arch_ids, get_config
+from repro.core import config as mmcfg
 from repro.core import roofline
-from repro.core.hw import TPU_V5E, peak_flops
+from repro.core.hw import peak_flops
 from repro.distributed import sharding as shd
 from repro.launch import shapes as shapes_mod
 from repro.launch.mesh import make_production_mesh
@@ -486,15 +487,18 @@ class CellProber:
             cost = self.probe_decode()
             mflops = model_flops(self.cfg, tokens=self.cell.global_batch,
                                  mode="serve")
-        peak = peak_flops(TPU_V5E, 2)
+        # Roofline terms against the context-resolved chip (mm_config /
+        # --chip), so cross-device probes report per-chip fractions.
+        chip = mmcfg.current().chip_spec
+        peak = peak_flops(chip, 2)
         rep = roofline.RooflineReport(
             arch=self.arch, shape=self.cell.name, mesh=self.mesh_kind,
             chips=self.chips,
             hlo_flops=cost.flops, hlo_bytes=cost.bytes,
             collective_bytes=cost.coll_bytes,
             compute_s=cost.flops / peak,
-            memory_s=cost.bytes / TPU_V5E.hbm_bw,
-            collective_s=cost.coll_bytes / (TPU_V5E.ici_bw_per_link * 4),
+            memory_s=cost.bytes / chip.hbm_bw,
+            collective_s=cost.coll_bytes / (chip.ici_bw_per_link * 4),
             model_flops=mflops, peak_flops=peak,
             bytes_per_device=0, collective_counts=cost.coll_counts)
         rec = rep.to_json()
@@ -510,6 +514,7 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
     ap.add_argument("--skip-existing", action="store_true")
+    mmcfg.add_cli_args(ap)
     args = ap.parse_args()
 
     cells = (shapes_mod.cells(all_arch_ids(), get_config) if args.all
@@ -517,20 +522,24 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     import traceback
     failures = []
-    for arch, shape in cells:
-        path = os.path.join(args.out, f"{arch}__{shape}__{args.mesh}.json")
-        if args.skip_existing and os.path.exists(path):
-            continue
-        try:
-            rec = CellProber(arch, shape, args.mesh).run()
-            with open(path, "w") as fh:
-                json.dump(rec, fh, indent=2, default=float)
-            print(f"[probe] {arch} {shape} {args.mesh}: "
-                  f"dom={rec['dominant']} frac={rec['roofline_fraction']:.3f} "
-                  f"useful={rec['useful_ratio']:.2f} ({rec['probe_s']:.0f}s)")
-        except Exception as e:  # noqa: BLE001
-            traceback.print_exc()
-            failures.append((arch, shape, repr(e)))
+    with mmcfg.scope_from_args(args):
+        for arch, shape in cells:
+            path = os.path.join(args.out,
+                                f"{arch}__{shape}__{args.mesh}.json")
+            if args.skip_existing and os.path.exists(path):
+                continue
+            try:
+                rec = CellProber(arch, shape, args.mesh).run()
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=2, default=float)
+                print(f"[probe] {arch} {shape} {args.mesh}: "
+                      f"dom={rec['dominant']} "
+                      f"frac={rec['roofline_fraction']:.3f} "
+                      f"useful={rec['useful_ratio']:.2f} "
+                      f"({rec['probe_s']:.0f}s)")
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape, repr(e)))
     if failures:
         print(f"[probe] {len(failures)} failures: {failures}")
         raise SystemExit(1)

@@ -32,6 +32,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import all_arch_ids, get_config
+from repro.core import config as mmcfg
 from repro.core import roofline
 from repro.distributed import sharding as shd
 from repro.launch import shapes as shapes_mod
@@ -216,6 +217,7 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
     ap.add_argument("--skip-existing", action="store_true")
+    mmcfg.add_cli_args(ap)
     args = ap.parse_args()
 
     meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
@@ -226,18 +228,22 @@ def main():
         cell_list = [(args.arch, args.shape)]
 
     failures = []
-    for arch, shape in cell_list:
-        for mk in meshes:
-            path = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
-            if args.skip_existing and os.path.exists(path):
-                continue
-            try:
-                run_cell(arch, shape, mk, args.out)
-            except Exception as e:  # noqa: BLE001 — report and continue
-                failures.append((arch, shape, mk, repr(e)))
-                traceback.print_exc()
-                print(f"[dryrun] FAIL {arch} {shape} {mk}: {e}",
-                      file=sys.stderr)
+    # Session-scoped matmul config: every cell lowers/compiles under one
+    # mm_config layer (an AMP/chip sweep over the whole dry-run matrix is
+    # a flag, not a code edit).
+    with mmcfg.scope_from_args(args):
+        for arch, shape in cell_list:
+            for mk in meshes:
+                path = os.path.join(args.out, f"{arch}__{shape}__{mk}.json")
+                if args.skip_existing and os.path.exists(path):
+                    continue
+                try:
+                    run_cell(arch, shape, mk, args.out)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((arch, shape, mk, repr(e)))
+                    traceback.print_exc()
+                    print(f"[dryrun] FAIL {arch} {shape} {mk}: {e}",
+                          file=sys.stderr)
     if failures:
         print(f"[dryrun] {len(failures)} failures", file=sys.stderr)
         sys.exit(1)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.core import config as mmcfg
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
 from repro.serve import encdec_engine, engine
@@ -27,6 +28,7 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.8)
+    mmcfg.add_cli_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -40,31 +42,35 @@ def main():
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
         jnp.int32)
 
-    if cfg.family == "encdec":
-        frames = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.frontend_len, cfg.d_model)),
-            jnp.float32)
-        cache, logits = encdec_engine.prefill(params, cfg, frames, toks,
-                                              max_len=max_len)
-        step = jax.jit(lambda c, t, p: encdec_engine.decode_step(
-            params, cfg, c, t, p))
-    else:
-        cache, logits = engine.prefill(params, cfg, toks, max_len=max_len)
-        step = jax.jit(lambda c, t, p: engine.decode_step(
-            params, cfg, c, t, p))
+    # One mm_config layer over prefill + every decode trace: the serving
+    # session's planning knobs are set once, not threaded per call.
+    with mmcfg.scope_from_args(args):
+        if cfg.family == "encdec":
+            frames = jnp.asarray(
+                rng.normal(size=(args.batch, cfg.frontend_len, cfg.d_model)),
+                jnp.float32)
+            cache, logits = encdec_engine.prefill(params, cfg, frames, toks,
+                                                  max_len=max_len)
+            step = jax.jit(lambda c, t, p: encdec_engine.decode_step(
+                params, cfg, c, t, p))
+        else:
+            cache, logits = engine.prefill(params, cfg, toks,
+                                           max_len=max_len)
+            step = jax.jit(lambda c, t, p: engine.decode_step(
+                params, cfg, c, t, p))
 
-    key = jax.random.PRNGKey(1)
-    out_tokens = []
-    t0 = time.time()
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    for i in range(args.gen):
-        out_tokens.append(np.asarray(tok))
-        logits, cache = step(cache, tok, jnp.asarray(args.prompt_len + i,
-                                                     jnp.int32))
-        key, sub = jax.random.split(key)
-        tok = jax.random.categorical(
-            sub, logits / args.temperature, -1).astype(jnp.int32)
-    dt = time.time() - t0
+        key = jax.random.PRNGKey(1)
+        out_tokens = []
+        t0 = time.time()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(args.gen):
+            out_tokens.append(np.asarray(tok))
+            logits, cache = step(cache, tok,
+                                 jnp.asarray(args.prompt_len + i, jnp.int32))
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / args.temperature, -1).astype(jnp.int32)
+        dt = time.time() - t0
     gen = np.stack(out_tokens, 1)
     print(f"[serve] generated {gen.shape} tokens in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s)")

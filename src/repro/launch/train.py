@@ -6,6 +6,10 @@
 --reduced trains the smoke-sized config on the host mesh (CPU-runnable);
 full-size configs expect a real TPU fleet (the multi-pod dry-run is the
 no-hardware proof path).
+
+Matmul planning is session-scoped: --amp/--chip/--mm-backend/--plan-mode
+push one mm_config layer over the whole run (see repro.core.config), so an
+AMP sweep over a full training job is a CLI flag, not a code edit.
 """
 
 from __future__ import annotations
@@ -15,6 +19,7 @@ import argparse
 import jax
 
 from repro.configs.base import get_config
+from repro.core import config as mmcfg
 from repro.data.pipeline import DataLoader, MemmapTokens, SyntheticLM
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models.model import build_model
@@ -40,6 +45,7 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--production-mesh", action="store_true")
+    mmcfg.add_cli_args(ap)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -61,7 +67,8 @@ def main():
               else SyntheticLM(cfg.vocab_size))
     loader = DataLoader(source, args.batch, args.seq, mesh=mesh)
     try:
-        out = trainer.run(loader)
+        with mmcfg.scope_from_args(args):
+            out = trainer.run(loader)
     finally:
         loader.close()
     print(f"[train] done: final_loss={out['final_loss']}")

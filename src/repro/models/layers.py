@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import skewmm
+from repro.core.epilogue import Epilogue
 
 
 def dtype_of(cfg) -> jnp.dtype:
@@ -95,14 +96,14 @@ def mlp(x: jax.Array, p: dict, cfg, residual: jax.Array | None = None
     before the one cast to the native dtype (§Perf iteration B1 still
     holds: matmuls accumulate fp32 inside skewmm)."""
     if cfg.mlp_type == "swiglu":
-        g = skewmm.matmul(x, p["w_gate"], epilogue="silu")
+        g = skewmm.matmul(x, p["w_gate"], epilogue=Epilogue(act="silu"))
         u = skewmm.matmul(x, p["w_up"])
         h = g * u
     else:
-        h = skewmm.matmul(x, p["w_up"], epilogue="gelu")
+        h = skewmm.matmul(x, p["w_up"], epilogue=Epilogue(act="gelu"))
     if residual is not None:
-        return skewmm.matmul(h, p["w_down"], epilogue="residual",
-                             residual=residual)
+        return skewmm.matmul(h, p["w_down"],
+                             epilogue=Epilogue(residual=residual))
     return skewmm.matmul(h, p["w_down"])
 
 

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import config as mmcfg
 from repro.core import skewmm
 from repro.models import attention as attn_mod
 from repro.models import layers, moe, rglru, ssm, transformer
@@ -117,36 +118,40 @@ def _rec_prefill(x, p, cfg):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, max_len: int,
-            prefix_embeds=None):
+            prefix_embeds=None, mm: mmcfg.MatmulConfig | None = None):
     """tokens (B, S) -> (cache, last-position logits (B, V)).
 
     The cache is sized for max_len; positions [0, T) are filled.
+    `mm` scopes a matmul configuration over every contraction of the
+    prefill (equivalent to wrapping the call in ``with mm_config(...)``;
+    an enclosing context still applies when mm is None).
     """
-    x = transformer.embed_tokens(params, cfg, tokens)
-    if prefix_embeds is not None:
-        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
-    total = x.shape[1]
-    positions = jnp.arange(total, dtype=jnp.int32)
-    if cfg.pos_embedding == "sinusoidal":
-        x = x + layers.sinusoidal_pos(positions, cfg.d_model)[None].astype(
-            x.dtype)
-    cache = {}
-    for si, (unit, n) in enumerate(cfg.stage_list()):
+    with mmcfg.scope(mm):
+        x = transformer.embed_tokens(params, cfg, tokens)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        total = x.shape[1]
+        positions = jnp.arange(total, dtype=jnp.int32)
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + layers.sinusoidal_pos(positions,
+                                          cfg.d_model)[None].astype(x.dtype)
+        cache = {}
+        for si, (unit, n) in enumerate(cfg.stage_list()):
 
-        def unit_prefill(x, unit_params, unit=unit):
-            entries = {}
-            for i, kind in enumerate(unit):
-                x, e = _block_prefill(x, unit_params[f"b{i}"], cfg, kind,
-                                      positions, max_len)
-                entries[f"b{i}"] = e
-            return x, entries
+            def unit_prefill(x, unit_params, unit=unit):
+                entries = {}
+                for i, kind in enumerate(unit):
+                    x, e = _block_prefill(x, unit_params[f"b{i}"], cfg, kind,
+                                          positions, max_len)
+                    entries[f"b{i}"] = e
+                return x, entries
 
-        x, stage_cache = jax.lax.scan(
-            jax.checkpoint(unit_prefill), x, params[f"stage{si}"])
-        cache[f"stage{si}"] = stage_cache
-    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = transformer.unembed(params, cfg, h[:, -1])
-    return cache, logits
+            x, stage_cache = jax.lax.scan(
+                jax.checkpoint(unit_prefill), x, params[f"stage{si}"])
+            cache[f"stage{si}"] = stage_cache
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = transformer.unembed(params, cfg, h[:, -1])
+        return cache, logits
 
 
 # =====================================================================
@@ -268,28 +273,35 @@ def _block_decode(x, p, cfg: ModelConfig, kind: str, entry, pos):
     return x, new_entry
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                mm: mmcfg.MatmulConfig | None = None):
     """One decode step.  tokens (B,) int32; pos () int32 — the absolute
-    position being generated.  Returns (logits (B, V), new_cache)."""
-    x = transformer.embed_tokens(params, cfg, tokens[:, None])
-    if cfg.pos_embedding == "sinusoidal":
-        x = x + layers.sinusoidal_pos(
-            jnp.full((1,), pos, jnp.int32), cfg.d_model)[None].astype(x.dtype)
-    new_cache = {}
-    for si, (unit, n) in enumerate(cfg.stage_list()):
+    position being generated.  Returns (logits (B, V), new_cache).
 
-        def unit_decode(x, scanned, unit=unit):
-            unit_params, unit_cache = scanned
-            entries = {}
-            for i, kind in enumerate(unit):
-                x, e = _block_decode(x, unit_params[f"b{i}"], cfg, kind,
-                                     unit_cache[f"b{i}"], pos)
-                entries[f"b{i}"] = e
-            return x, entries
+    `mm` scopes a matmul configuration over the step's contractions (the
+    maximally right-skewed regime — a decode-serving thread can pin e.g.
+    a lower AMP without touching any model code)."""
+    with mmcfg.scope(mm):
+        x = transformer.embed_tokens(params, cfg, tokens[:, None])
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + layers.sinusoidal_pos(
+                jnp.full((1,), pos, jnp.int32),
+                cfg.d_model)[None].astype(x.dtype)
+        new_cache = {}
+        for si, (unit, n) in enumerate(cfg.stage_list()):
 
-        x, stage_cache = jax.lax.scan(
-            unit_decode, x, (params[f"stage{si}"], cache[f"stage{si}"]))
-        new_cache[f"stage{si}"] = stage_cache
-    h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = transformer.unembed(params, cfg, h[:, 0])
-    return logits, new_cache
+            def unit_decode(x, scanned, unit=unit):
+                unit_params, unit_cache = scanned
+                entries = {}
+                for i, kind in enumerate(unit):
+                    x, e = _block_decode(x, unit_params[f"b{i}"], cfg, kind,
+                                         unit_cache[f"b{i}"], pos)
+                    entries[f"b{i}"] = e
+                return x, entries
+
+            x, stage_cache = jax.lax.scan(
+                unit_decode, x, (params[f"stage{si}"], cache[f"stage{si}"]))
+            new_cache[f"stage{si}"] = stage_cache
+        h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = transformer.unembed(params, cfg, h[:, 0])
+        return logits, new_cache

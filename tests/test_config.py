@@ -1,0 +1,267 @@
+"""Context-scoped matmul config, structured epilogues, chip registry."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import config, hw, skewmm
+from repro.core.config import MatmulConfig, mm_config
+from repro.core.epilogue import Epilogue
+from repro.core.planner import plan_matmul, sweep_aspect_ratios
+
+
+# ------------------------------------------------------------- layering
+def test_defaults_match_legacy():
+    cfg = config.current()
+    assert cfg.backend == "xla" and cfg.amp == 0.45
+    assert cfg.chip_spec is hw.TPU_V5E and cfg.plan_mode == "skew_aware"
+
+
+def test_nested_contexts_override_fieldwise():
+    with mm_config(amp=0.3, chip="ipu_gc200"):
+        outer = config.current()
+        assert outer.amp == 0.3 and outer.chip_spec is hw.IPU_GC200
+        with mm_config(amp=0.1):
+            inner = config.current()
+            # inner overrides amp; chip falls through from the outer layer
+            assert inner.amp == 0.1
+            assert inner.chip_spec is hw.IPU_GC200
+        assert config.current().amp == 0.3
+    assert config.current().amp == 0.45
+
+
+def test_explicit_kwargs_beat_context():
+    with mm_config(amp=0.3, plan_mode="naive"):
+        cfg = config.resolve(amp=0.9)
+        assert cfg.amp == 0.9                   # explicit wins
+        assert cfg.plan_mode == "naive"         # context survives
+    a = jnp.ones((8, 256), jnp.bfloat16)
+    b = jnp.ones((256, 128), jnp.bfloat16)
+    with mm_config(amp=0.3):
+        with skewmm.plan_capture() as log:
+            skewmm.matmul(a, b, amp=0.9)
+    assert log[0] is plan_matmul(8, 256, 128, amp=0.9)
+
+
+def test_context_beats_env_var(monkeypatch):
+    monkeypatch.setenv("REPRO_MM_BACKEND", "pallas")
+    assert config.current().backend == "pallas"
+    with mm_config(backend="xla"):
+        assert config.current().backend == "xla"
+    assert config.current().backend == "pallas"
+    monkeypatch.delenv("REPRO_MM_BACKEND")
+    assert config.current().backend == "xla"
+
+
+def test_invalid_config_raises():
+    with pytest.raises(ValueError):
+        MatmulConfig(backend="cuda")
+    with pytest.raises(ValueError):
+        MatmulConfig(amp=0.0)
+    with pytest.raises(ValueError):
+        MatmulConfig(plan_mode="greedy")
+    with pytest.raises(TypeError):
+        with mm_config(nonsense=1):
+            pass
+    with pytest.raises(KeyError):
+        with mm_config(chip="tpu_v9"):
+            pass
+
+
+def test_none_overrides_are_unset():
+    """None means 'unset' in mm_config too — an unpassed CLI flag handed
+    straight through must be a no-op layer, not a crash."""
+    with mm_config(amp=None, chip=None, backend=None):
+        assert config.current() == MatmulConfig()
+    with mm_config(amp=0.2):
+        with mm_config(amp=None):            # does not reset the field
+            assert config.current().amp == 0.2
+
+
+def test_stack_is_thread_local():
+    seen = {}
+
+    def worker():
+        seen["amp"] = config.current().amp
+
+    with mm_config(amp=0.2):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    assert seen["amp"] == 0.45              # fresh thread: defaults
+
+
+def test_scope_runs_a_prebuilt_config():
+    cfg = MatmulConfig(amp=0.25, chip="ipu_gc200")
+    with config.scope(cfg):
+        assert config.current().amp == 0.25
+        assert config.current().chip_spec is hw.IPU_GC200
+    with config.scope(None):                # no-op
+        assert config.current().amp == 0.45
+
+
+# --------------------------------------------------------- chip registry
+def test_chip_registry_lookup():
+    assert hw.get_chip("ipu_gc200") is hw.IPU_GC200
+    assert hw.get_chip("gc200") is hw.IPU_GC200          # alias
+    assert hw.get_chip(hw.GPU_A30) is hw.GPU_A30         # pass-through
+    assert "gpu_rtx2080ti" in hw.list_chips()
+    with pytest.raises(KeyError):
+        hw.get_chip("tpu_v9")
+    with pytest.raises(TypeError):
+        hw.get_chip(42)
+
+
+def test_register_chip_roundtrip():
+    spec = hw.ChipSpec(name="test_chip_xyz", peak_bf16_flops=1e12,
+                       peak_fp32_flops=1e12, hbm_bw=1e11,
+                       ici_bw_per_link=1e9, vmem_bytes=2**20)
+    hw.register_chip(spec, aliases=("xyz",))
+    assert hw.get_chip("xyz") is spec
+    assert plan_matmul(256, 256, 256, chip="test_chip_xyz").plan.bm > 0
+
+
+def test_string_chip_names_accepted_everywhere():
+    c1 = plan_matmul(1024, 1024, 1024, chip="ipu_gc200")
+    c2 = plan_matmul(1024, 1024, 1024, chip=hw.IPU_GC200)
+    assert c1 is c2                          # same lru_cache entry
+    from repro.core.vertexstats import stats_for
+    s = stats_for(1024, 1024, 1024, chip="gc200")
+    assert s.vertex_count == c1.grid_steps
+
+
+# ----------------------------------------------- chip-aware AMP budgets
+def test_sweep_under_ipu_context_budgets_gc200_sram():
+    """A sweep under mm_config(chip="ipu_gc200") must budget plans against
+    GC200's 918 MB In-Processor SRAM, not TPU VMEM."""
+    with mm_config(chip="ipu_gc200", amp=0.6):
+        rows = sweep_aspect_ratios(4096 * 4096, [0.25, 1.0, 4.0])
+        big = plan_matmul(8192, 8192, 8192)
+    assert all(r["chip"] == "ipu_gc200" for r in rows)
+    budget = 0.6 * hw.IPU_GC200.vmem_bytes
+    assert big.vmem_bytes <= budget
+    # the plan claims far more fast memory than ANY TPU amp could grant —
+    # proof it was budgeted against GC200 SRAM, not v5e VMEM.
+    assert big.vmem_bytes > hw.TPU_V5E.vmem_bytes
+
+
+def test_full_model_replans_under_context():
+    """Acceptance: `with mm_config(amp=A, chip=C):` re-plans every matmul
+    of a full-model forward with zero per-call kwargs — every captured
+    cost is exactly the plan the planner produces for (A, C)."""
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+    cfg = get_config("gemma2-27b").reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.zeros((1, 16), jnp.int32)}
+    with mm_config(amp=0.2, chip="ipu_gc200"):
+        with skewmm.plan_capture() as log:
+            h, _ = bundle.hidden_fn(params, batch)
+            bundle.logits_fn(params, h)
+    costs = [c for c in log if not isinstance(c, skewmm.UnplannedContraction)]
+    assert len(costs) >= 4
+    for c in costs:
+        d = c.dims
+        assert c is plan_matmul(d.m, d.k, d.n, dtype_bytes=d.dtype_bytes,
+                                amp=0.2, chip="ipu_gc200", batch=d.batch)
+        assert c.vmem_bytes <= 0.2 * hw.IPU_GC200.vmem_bytes
+
+
+def test_ops_fallback_planning_uses_context_chip():
+    """ops.skew_matmul with no explicit plan must plan for the resolved
+    chip (regression: it used to hardcode the TPU default)."""
+    from repro.kernels import ops
+    a = jnp.ones((64, 256), jnp.float32)
+    b = jnp.ones((256, 128), jnp.float32)
+    with mm_config(chip="ipu_gc200", amp=0.3):
+        out = ops.skew_matmul(a, b)
+        want_plan = plan_matmul(64, 256, 128, dtype_bytes=4, amp=0.3,
+                                chip="ipu_gc200").plan
+    assert out.shape == (64, 128)
+    # the cached planner entry for the context chip exists and differs in
+    # provenance from the TPU default entry
+    tpu_plan = plan_matmul(64, 256, 128, dtype_bytes=4).plan
+    assert want_plan is not tpu_plan
+
+
+# ----------------------------------------------------------- epilogues
+def test_epilogue_parse_string_compat():
+    bias = jnp.ones((8,), jnp.float32)
+    res = jnp.ones((4, 8), jnp.float32)
+    ep = Epilogue.parse("bias_gelu_residual", bias=bias, residual=res)
+    assert ep.tokens == ("bias", "gelu", "residual")
+    assert ep.act == "gelu" and ep.bias is bias and ep.residual is res
+    assert Epilogue.parse(None).tokens == ()
+    assert Epilogue.parse("none").tokens == ()
+    passthrough = Epilogue(act="silu")
+    assert Epilogue.parse(passthrough) is passthrough
+
+
+def test_epilogue_validation_raises_valueerror():
+    # missing operand: ValueError (not a bare assert) in BOTH backends,
+    # because the check lives in Epilogue.parse, shared by both.
+    a = jnp.ones((8, 64), jnp.float32)
+    b = jnp.ones((64, 32), jnp.float32)
+    for backend in ("xla", "pallas"):
+        with pytest.raises(ValueError):
+            skewmm.matmul(a, b, backend=backend, epilogue="bias")
+        with pytest.raises(ValueError):
+            skewmm.matmul(a, b, backend=backend, epilogue="residual")
+        with pytest.raises(ValueError):
+            skewmm.matmul(a, b, backend=backend, epilogue="gelu_silu")
+        with pytest.raises(ValueError):
+            skewmm.matmul(a, b, backend=backend, epilogue="tanh")
+    with pytest.raises(ValueError):
+        Epilogue(act="tanh")
+
+
+def test_epilogue_scale_op_both_backends():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(16, 64)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(64, 32)) * 0.3, jnp.float32)
+    want = 0.25 * np.asarray(a) @ np.asarray(b)
+    for backend in ("xla", "pallas"):
+        got = skewmm.matmul(a, b, backend=backend,
+                            epilogue=Epilogue(scale=0.25))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3,
+                                   atol=1e-4)
+
+
+def test_backends_numerically_aligned_on_structured_epilogue():
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(48, 96)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(96, 64)) * 0.3, jnp.float32)
+    ep = Epilogue(act="gelu", scale=0.5,
+                  bias=jnp.asarray(rng.normal(size=(64,)), jnp.float32),
+                  residual=jnp.asarray(rng.normal(size=(48, 64)),
+                                       jnp.float32))
+    x = skewmm.matmul(a, b, backend="xla", epilogue=ep)
+    p = skewmm.matmul(a, b, backend="pallas", epilogue=ep)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(p), rtol=2e-3,
+                               atol=1e-4)
+
+
+# --------------------------------------------------------- plan logging
+def test_einsum_mm_records_unplanned_marker():
+    a = jnp.ones((4, 8, 16), jnp.float32)
+    b = jnp.ones((16, 8), jnp.float32)
+    with skewmm.plan_capture() as log:
+        skewmm.einsum_mm("bij,jk->bik", a, b)
+    assert len(log) == 1
+    marker = log[0]
+    assert isinstance(marker, skewmm.UnplannedContraction)
+    assert marker.spec == "bij,jk->bik"
+    assert marker.a_shape == (4, 8, 16) and marker.b_shape == (16, 8)
+
+
+def test_backend_context_routes_pallas():
+    a = jnp.ones((16, 64), jnp.float32)
+    b = jnp.ones((64, 32), jnp.float32)
+    with mm_config(backend="pallas"):
+        out = skewmm.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-5)

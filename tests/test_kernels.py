@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core.costmodel import BlockPlan
+from repro.core.epilogue import Epilogue
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(42)
@@ -132,6 +133,33 @@ def test_epilogue_spec_validation():
     with pytest.raises(ValueError):
         ops.skew_matmul(a, b, plan=BlockPlan(32, 128, 32),
                         epilogue="tanh")
+
+
+@pytest.mark.parametrize("schedule", ["k_inner", "a_resident", "b_resident"])
+def test_structured_epilogue_matches_oracle(schedule):
+    """The Epilogue-object surface: operands ride on the spec, and the
+    static `scale` op fuses without new operand plumbing."""
+    m, k, n = 100, 300, 200
+    a, b = _arr((m, k), scale=0.3), _arr((k, n), scale=0.3)
+    ep = Epilogue(act="silu", scale=0.5, bias=_arr((n,)),
+                  residual=_arr((m, n)))
+    plan = BlockPlan(32, 128, 128, schedule=schedule)
+    got = ops.skew_matmul(a, b, plan=plan, epilogue=ep)
+    want = ref.matmul_epilogue_ref(a, b, epilogue=ep)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=1e-4)
+
+
+def test_structured_epilogue_batched_grid():
+    nb, m, k, n = 2, 40, 256, 96
+    a, b = _arr((nb, m, k), scale=0.3), _arr((k, n), scale=0.3)
+    ep = Epilogue(act="gelu", bias=_arr((n,)), residual=_arr((nb, m, n)))
+    plan = BlockPlan(16, 128, 96, batch_grid=True)
+    got = ops.skew_matmul_batched(a, b, plan=plan, epilogue=ep)
+    want = ref.matmul_epilogue_ref(a, b, bias=ep.bias, residual=ep.residual,
+                                   epilogue="bias_gelu_residual")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=1e-4)
 
 
 # ------------------------------------------------------------ flash attention
