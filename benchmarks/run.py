@@ -1,115 +1,166 @@
-"""Benchmark harness — one function per paper table/figure.
+"""Benchmark harness — one suite per paper table/figure, structured records.
 
-Prints ``name,us_per_call,derived`` CSV rows.  us_per_call is measured
-wall-time on this host (CPU, XLA) — meaningful as a *relative* number;
-`derived` carries the modeled quantity that reproduces the paper's
-artifact (roofline fraction, vertex count, max problem size, ...).
+Every row is a `repro.bench.BenchResult`: measured wall time (median/IQR
+over repeats, host-relative — meaningful as a *relative* number) plus
+the deterministic modeled quantities that reproduce the paper's
+artifacts (roofline fractions, vertex counts, skew spreads, AMP max
+sizes) and full provenance (chip, resolved MatmulConfig, chosen plan,
+jax/python versions, git sha).  The legacy ``name,us_per_call,derived``
+CSV still streams to stdout as suites run.
 
-  fig4_squared_mm     — paper Fig. 4: squared MM throughput vs size
-  fig5_skewed_mm      — paper Fig. 5: skew sweep, naive vs planned.
-                        Takes a chip list (--chip, repeatable): each chip
-                        is swept under ``mm_config(chip=...)`` and a
-                        per-chip skew-spread summary row reproduces the
-                        paper's cross-device finding (the IPU's flat curve
-                        vs the skew-sensitive GPU).
-  tab_vertex_stats    — §5.1 vertex-count blowup (L/S/R)
-  tab_memory_amp      — §2.4/§6 AMP knob vs max problem size + fraction
-  tab_lm_matmul_census— beyond-paper: every matmul the zoo actually runs,
-                        classified by skew, with planned fractions
-  bench_train_step    — reduced-config train-step wall time per arch family
-  bench_decode_step   — reduced-config decode wall time per arch family
+Suites:
 
-CLI: ``python benchmarks/run.py [--chip C ...] [--only SUBSTR]`` — --only
-runs only benchmarks whose name contains the substring (e.g. --only fig5
-for the CI smoke).
+  fig4        — paper Fig. 4: squared MM throughput vs size
+  fig5        — paper Fig. 5: skew sweep, naive vs planned, across the
+                chip axis (--chip, repeatable); per-chip skew-spread
+                summary rows reproduce the paper's IPU-vs-GPU verdict
+  vertex      — §5.1 vertex-count blowup (L/S/R)
+  memory_amp  — §2.4/§6 AMP knob vs max problem size + fraction
+  census      — beyond-paper: every matmul the zoo actually runs,
+                classified by skew, with planned fractions
+  train       — reduced-config train-step wall time per arch family
+  decode      — reduced-config decode wall time per arch family
+
+CLI::
+
+  python benchmarks/run.py [--only SUBSTR] [--chip C ...] [--tiny]
+      [--json OUT.json] [--baseline DIR] [--update-baseline]
+
+``--tiny`` shrinks the *measured* work (smaller problem sizes, fewer
+archs, fewer timing repeats) so the whole run finishes in CI minutes;
+the modeled sweeps stay at paper size — planning is pure cost-model
+arithmetic, so the deterministic regression surface is identical at both
+fidelities.  ``--json`` writes the run document (default:
+``BENCH_<timestamp>.json`` at the repo root) plus per-suite siblings.
+``--baseline DIR`` diffs the run against committed baselines and exits
+non-zero on out-of-tolerance deterministic metrics;
+``--update-baseline`` rewrites them instead (commit the result).
 """
 
 from __future__ import annotations
 
 import argparse
-import math
-import time
+import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.bench import io as bench_io
+from repro.bench.compare import compare
+from repro.bench.record import SchemaError
+from repro.bench.suite import BenchSuite, RunContext
+from repro.bench.timing import measure
 from repro.core import hw, skewmm
 from repro.core.config import mm_config
 from repro.core.costmodel import MatmulCost
 from repro.core.planner import plan_matmul, sweep_aspect_ratios
-from repro.core.vertexstats import paper_vertex_table, stats_for
+from repro.core.vertexstats import paper_vertex_table
+
+SUITE = BenchSuite()
+
+# The paper's cross-device axis: our TPU adaptation target plus the
+# paper's own IPU and its GPU baseline.  All three are modeled, so the
+# default fig5 run reproduces the cross-device verdict for free.
+DEFAULT_CHIPS = ("tpu_v5e", "ipu_gc200", "gpu_rtx2080ti")
+DEFAULT_BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
 
 
-def _time_call(fn, *args, iters=3) -> float:
-    fn(*args)                                  # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+def _jit_matmul():
+    return jax.jit(lambda x, y: skewmm.matmul(x, y))
 
 
-def _row(name: str, us: float, derived: str):
-    print(f"{name},{us:.1f},{derived}")
-
-
-# ----------------------------------------------------------- paper Fig. 4
-def fig4_squared_mm():
+@SUITE.register("fig4")
+def fig4_squared_mm(rec, ctx):
     """Squared MM: modeled v5e fraction (planned vs naive) + measured CPU
     wall time of the planned matmul for the sizes that fit this host."""
+    measured_max = 512 if ctx.tiny else 2048
     for n in (512, 1024, 2048, 3584, 4096, 8192):
         planned = plan_matmul(n, n, n)
         naive = plan_matmul(n, n, n, mode="naive")
-        us = float("nan")
-        if n <= 2048:
+        timing = None
+        if n <= measured_max:
             a = jnp.ones((n, n), jnp.float32)
             b = jnp.ones((n, n), jnp.float32)
-            us = _time_call(jax.jit(lambda x, y: skewmm.matmul(x, y)), a, b)
-        _row(f"fig4_squared_{n}", us,
-             f"planned_frac={planned.roofline_fraction(hw.TPU_V5E):.3f};"
-             f"naive_frac={naive.roofline_fraction(hw.TPU_V5E):.3f};"
-             f"modeled_tflops={planned.achieved_flops / 1e12:.1f}")
+            timing = measure(
+                _jit_matmul(), a, b, iters=ctx.iters, repeats=ctx.repeats
+            )
+        rec(
+            f"fig4_squared_{n}",
+            axes={"n": n},
+            metrics={
+                "planned_frac": planned.roofline_fraction(hw.TPU_V5E),
+                "naive_frac": naive.roofline_fraction(hw.TPU_V5E),
+                "modeled_tflops": planned.achieved_flops / 1e12,
+            },
+            timing=timing,
+            plan=planned,
+        )
 
 
-# ----------------------------------------------------------- paper Fig. 5
-def fig5_skewed_mm(chips: tuple[str, ...] = ("tpu_v5e",)):
+@SUITE.register("fig5")
+def fig5_skewed_mm(rec, ctx):
     """Skew sweeps: the paper's (A's aspect varied at constant A size) plus
     the beyond-paper output-aspect family (the LM-head / decode shape class).
 
-    Each row reports naive vs single-schedule (K-inner-only, the pre-family
-    planner) vs schedule-diverse planned roofline fractions and the chosen
-    schedule, so the planned-vs-naive and the schedule-diversity gaps are
-    both visible.
+    Each ratio row reports naive vs single-schedule (K-inner-only, the
+    pre-family planner) vs schedule-diverse planned roofline fractions and
+    the chosen schedule, so the planned-vs-naive and the schedule-diversity
+    gaps are both visible.
 
-    `chips` is the cross-device axis: each chip is swept under one
+    `ctx.chips` is the cross-device axis: each chip is swept under one
     ``mm_config(chip=...)`` layer (nothing else changes — the point of the
     context-scoped API), and a final ``fig5_<chip>_skew_spread`` row
     summarizes how flat the planned curve stays across skew — the paper's
     IPU-vs-GPU comparison: the GC200's huge uniform-latency SRAM keeps the
     curve flat where cache-budgeted GPUs sag at the extremes.
     """
-    ratios = [2.0 ** i for i in range(-8, 9, 2)]
-    for chip_name in chips:
+    ratios = [2.0**i for i in range(-8, 9, 2)]
+    for chip_name in ctx.chips:
         chip = hw.get_chip(chip_name)
         with mm_config(chip=chip):
             for vary, tag in (("a_aspect", "skew"), ("output", "oskew")):
                 rows = sweep_aspect_ratios(4096 * 4096, ratios, vary=vary)
                 for r in rows:
-                    m, k = r["m"], r["k"]
-                    us = float("nan")
+                    m, k, n = r["m"], r["k"], r["n"]
+                    timing = None
                     # wall time is host-relative; measure once (first chip)
-                    if (chip_name == chips[0] and vary == "a_aspect"
-                            and m * k <= 2048 * 2048 * 4):
+                    measurable = (
+                        chip_name == ctx.chips[0]
+                        and vary == "a_aspect"
+                        and m * k <= 2048 * 2048 * 4
+                    )
+                    if measurable and not ctx.tiny:
                         a = jnp.ones((m, k), jnp.float32)
-                        b = jnp.ones((k, r["n"]), jnp.float32)
-                        us = _time_call(
-                            jax.jit(lambda x, y: skewmm.matmul(x, y)), a, b)
-                    _row(f"fig5_{chip.name}_{tag}_{r['ratio']:g}", us,
-                         f"planned_frac={r['planned_fraction']:.3f};"
-                         f"single_frac={r['single_fraction']:.3f};"
-                         f"naive_frac={r['naive_fraction']:.3f};"
-                         f"schedule={r['schedule']};plan={r['plan']}")
+                        b = jnp.ones((k, n), jnp.float32)
+                        timing = measure(
+                            _jit_matmul(),
+                            a,
+                            b,
+                            iters=ctx.iters,
+                            repeats=ctx.repeats,
+                        )
+                    rec(
+                        f"fig5_{chip.name}_{tag}_{r['ratio']:g}",
+                        axes={
+                            "chip": chip.name,
+                            "vary": vary,
+                            "ratio": r["ratio"],
+                            "m": m,
+                            "k": k,
+                            "n": n,
+                        },
+                        metrics={
+                            "planned_frac": r["planned_fraction"],
+                            "single_frac": r["single_fraction"],
+                            "naive_frac": r["naive_fraction"],
+                        },
+                        info={
+                            "schedule": r["schedule"],
+                            "plan": "x".join(str(b) for b in r["plan"]),
+                        },
+                        timing=timing,
+                        plan=r["planned_cost"],
+                    )
                 if vary == "a_aspect":
                     # The paper's cross-device verdict in two numbers:
                     # naive_spread is the library-style fixed decomposition
@@ -119,30 +170,44 @@ def fig5_skewed_mm(chips: tuple[str, ...] = ("tpu_v5e",)):
                     # flattening every chip.
                     planned = [r["planned_fraction"] for r in rows]
                     naive = [r["naive_fraction"] for r in rows]
-                    _row(f"fig5_{chip.name}_skew_spread", 0.0,
-                         f"planned_min={min(planned):.3f};"
-                         f"planned_spread={max(planned) - min(planned):.3f};"
-                         f"naive_min={min(naive):.3f};"
-                         f"naive_spread={max(naive) - min(naive):.3f}")
+                    rec(
+                        f"fig5_{chip.name}_skew_spread",
+                        axes={"chip": chip.name},
+                        metrics={
+                            "planned_min": min(planned),
+                            "planned_spread": max(planned) - min(planned),
+                            "naive_min": min(naive),
+                            "naive_spread": max(naive) - min(naive),
+                        },
+                    )
 
 
-# ------------------------------------------------------------- §5.1 table
-def tab_vertex_stats():
+@SUITE.register("vertex")
+def tab_vertex_stats(rec, ctx):
     """Vertex-count analogue: grid steps for L/S/R skew, naive vs planned.
     Paper: 5542 / 5762 / 31743 vertices (right-skew blowup on IPU)."""
+    del ctx  # fully modeled; identical at both fidelities
     for mode in ("naive", "skew_aware"):
         rows = paper_vertex_table(mode=mode)
         for label, r in zip(("left", "square", "right"), rows):
-            _row(f"vertex_{mode}_{label}", 0.0,
-                 f"vertices={r.vertex_count};util={r.tile_utilization:.3f};"
-                 f"frac={r.roofline_fraction:.3f}")
+            rec(
+                f"vertex_{mode}_{label}",
+                axes={"mode": mode, "skew": label},
+                metrics={
+                    "vertices": r.vertex_count,
+                    "util": r.tile_utilization,
+                    "frac": r.roofline_fraction,
+                },
+                plan=r.plan_provenance(),
+            )
 
 
-# ----------------------------------------------------------- §2.4 memory
-def tab_memory_amp():
+@SUITE.register("memory_amp")
+def tab_memory_amp(rec, ctx):
     """AMP (availableMemoryProportion analogue) vs the largest square MM
     whose plan stays compute-bound, + fraction.  Paper: 3584^2 = 154 MB =
     17% of In-Processor memory at 69.3% of peak."""
+    del ctx  # fully modeled; identical at both fidelities
     for amp in (0.1, 0.2, 0.45, 0.6, 0.9):
         best_n, best_frac = 0, 0.0
         for n in (1024, 2048, 3584, 4096, 6144, 8192, 12288, 16384):
@@ -151,26 +216,40 @@ def tab_memory_amp():
             if frac >= best_frac - 1e-9:
                 best_n, best_frac = n, max(best_frac, frac)
         c = plan_matmul(best_n, best_n, best_n, amp=amp)
-        _row(f"memory_amp_{amp:g}", 0.0,
-             f"best_n={best_n};frac={best_frac:.3f};"
-             f"vmem_claim={c.vmem_bytes / 2**20:.1f}MiB")
+        rec(
+            f"memory_amp_{amp:g}",
+            axes={"amp": amp},
+            metrics={
+                "best_n": best_n,
+                "frac": best_frac,
+                "vmem_mib": c.vmem_bytes / 2**20,
+            },
+            plan=c,
+        )
 
 
-# ------------------------------------------- beyond-paper: LM matmul census
-def tab_lm_matmul_census():
+@SUITE.register("census")
+def tab_lm_matmul_census(rec, ctx):
     """Every matmul a reduced-config forward actually issues, classified by
     skew, with the planner's roofline fraction — the paper's analysis
     applied to the real workload of the framework."""
     from repro.configs.base import get_config
     from repro.models.model import build_model
-    for arch in ("gemma2-27b", "deepseek-v3-671b", "mamba2-2.7b"):
+
+    archs = ("mamba2-2.7b",) if ctx.tiny else (
+        "gemma2-27b",
+        "deepseek-v3-671b",
+        "mamba2-2.7b",
+    )
+    for arch in archs:
         cfg = get_config(arch).reduced()
         bundle = build_model(cfg)
         params = bundle.init(jax.random.PRNGKey(0))
         batch = {"tokens": jnp.zeros((2, 32), jnp.int32)}
         if cfg.family == "vlm":
             batch["prefix_embeds"] = jnp.zeros(
-                (2, cfg.frontend_len, cfg.d_model), jnp.float32)
+                (2, cfg.frontend_len, cfg.d_model), jnp.float32
+            )
         with skewmm.plan_capture() as log:
             h, _ = bundle.hidden_fn(params, batch)
             bundle.logits_fn(params, h)
@@ -178,28 +257,50 @@ def tab_lm_matmul_census():
         log = [c for c in log if isinstance(c, MatmulCost)]
         n_left = sum(1 for c in log if c.dims.skew > 1)
         n_right = sum(1 for c in log if c.dims.skew < -1)
-        n_sq = len(log) - n_left - n_right
-        worst = min((c.roofline_fraction(hw.TPU_V5E) for c in log),
-                    default=0.0)
-        scheds = {}
+        worst = min(
+            (c.roofline_fraction(hw.TPU_V5E) for c in log), default=0.0
+        )
+        scheds: dict[str, int] = {}
         for c in log:
             scheds[c.plan.schedule] = scheds.get(c.plan.schedule, 0) + 1
-        sched_str = "/".join(f"{s}:{n}" for s, n in sorted(scheds.items()))
-        _row(f"census_{arch}", 0.0,
-             f"matmuls={len(log)};left={n_left};square={n_sq};"
-             f"right={n_right};unplanned={n_unplanned};"
-             f"worst_frac={worst:.3f};scheds={sched_str}")
+        rec(
+            f"census_{arch}",
+            axes={"arch": arch},
+            metrics={
+                "matmuls": len(log),
+                "left": n_left,
+                "square": len(log) - n_left - n_right,
+                "right": n_right,
+                "unplanned": n_unplanned,
+                "worst_frac": worst,
+            },
+            info={
+                "scheds": "/".join(
+                    f"{s}:{c}" for s, c in sorted(scheds.items())
+                ),
+            },
+        )
 
 
-# ------------------------------------------------------- system benches
-def bench_train_step():
+@SUITE.register("train")
+def bench_train_step(rec, ctx):
+    """Reduced-config train-step wall time per arch family."""
     from repro.configs.base import get_config
     from repro.models.model import build_model
     from repro.optim.adamw import AdamW
-    from repro.train.train_step import (TrainStepConfig, init_train_state,
-                                        make_train_step)
-    for arch in ("phi4-mini-3.8b", "dbrx-132b", "mamba2-2.7b",
-                 "recurrentgemma-9b"):
+    from repro.train.train_step import (
+        TrainStepConfig,
+        init_train_state,
+        make_train_step,
+    )
+
+    archs = ("mamba2-2.7b",) if ctx.tiny else (
+        "phi4-mini-3.8b",
+        "dbrx-132b",
+        "mamba2-2.7b",
+        "recurrentgemma-9b",
+    )
+    for arch in archs:
         cfg = get_config(arch).reduced()
         bundle = build_model(cfg)
         opt = AdamW(lr=1e-3)
@@ -212,58 +313,142 @@ def bench_train_step():
             new_s, m = step(s, b)
             return m["loss"]
 
-        us = _time_call(run, state, batch)
-        _row(f"train_step_{arch}", us, f"family={cfg.family}")
+        timing = measure(run, state, batch, iters=ctx.iters, repeats=ctx.repeats)
+        rec(
+            f"train_step_{arch}",
+            axes={"arch": arch},
+            info={"family": cfg.family},
+            timing=timing,
+        )
 
 
-def bench_decode_step():
+@SUITE.register("decode")
+def bench_decode_step(rec, ctx):
+    """Reduced-config decode-step wall time per arch family."""
     from repro.configs.base import get_config
     from repro.models.model import build_model
     from repro.serve import engine
-    for arch in ("gemma2-27b", "deepseek-v3-671b", "mamba2-2.7b"):
+
+    archs = ("mamba2-2.7b",) if ctx.tiny else (
+        "gemma2-27b",
+        "deepseek-v3-671b",
+        "mamba2-2.7b",
+    )
+    for arch in archs:
         cfg = get_config(arch).reduced()
         bundle = build_model(cfg)
         params = bundle.init(jax.random.PRNGKey(0))
         toks = jnp.zeros((2, 32), jnp.int32)
         cache, _ = engine.prefill(params, cfg, toks, max_len=64)
-        step = jax.jit(lambda c, t, p: engine.decode_step(
-            params, cfg, c, t, p))
+        step = jax.jit(
+            lambda c, t, p: engine.decode_step(params, cfg, c, t, p)
+        )
 
         def run(c):
-            logits, c2 = step(c, jnp.zeros((2,), jnp.int32),
-                              jnp.asarray(32, jnp.int32))
+            logits, c2 = step(
+                c, jnp.zeros((2,), jnp.int32), jnp.asarray(32, jnp.int32)
+            )
             return logits
 
-        us = _time_call(run, cache)
-        _row(f"decode_step_{arch}", us, f"family={cfg.family}")
+        timing = measure(run, cache, iters=ctx.iters, repeats=ctx.repeats)
+        rec(
+            f"decode_step_{arch}",
+            axes={"arch": arch},
+            info={"family": cfg.family},
+            timing=timing,
+        )
 
 
-def main(argv=None) -> None:
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--chip", action="append", default=None,
-                    help="chip axis for the fig5 sweep; repeat for a "
-                         f"cross-chip comparison ({', '.join(hw.list_chips())})")
-    ap.add_argument("--only", default=None,
-                    help="run only benchmarks whose name contains this "
-                         "substring (e.g. fig5)")
+    ap.add_argument(
+        "--chip",
+        action="append",
+        default=None,
+        help="chip axis for the fig5 sweep; repeat for a cross-chip "
+        f"comparison (default: {', '.join(DEFAULT_CHIPS)}; "
+        f"registered: {', '.join(hw.list_chips())})",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="run only suites whose name contains this substring "
+        f"(suites: {', '.join(SUITE.names())})",
+    )
+    ap.add_argument(
+        "--tiny",
+        action="store_true",
+        help="reduced measured sizes/archs/repeats so the full run "
+        "finishes in CI minutes (modeled metrics are unchanged)",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="write the run document here (default: BENCH_<ts>.json "
+        "at the repo root) plus per-suite siblings",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        metavar="DIR",
+        help="diff this run against committed baseline documents and "
+        "exit 1 on out-of-tolerance deterministic metrics "
+        f"(conventional dir: {DEFAULT_BASELINE_DIR})",
+    )
+    ap.add_argument(
+        "--update-baseline",
+        action="store_true",
+        help="rewrite the baseline documents from this run instead of "
+        "comparing (writes to --baseline, default the conventional dir)",
+    )
     args = ap.parse_args(argv)
-    chips = tuple(args.chip) if args.chip else ("tpu_v5e",)
 
-    benches = [
-        ("fig4_squared_mm", fig4_squared_mm),
-        ("fig5_skewed_mm", lambda: fig5_skewed_mm(chips)),
-        ("tab_vertex_stats", tab_vertex_stats),
-        ("tab_memory_amp", tab_memory_amp),
-        ("tab_lm_matmul_census", tab_lm_matmul_census),
-        ("bench_train_step", bench_train_step),
-        ("bench_decode_step", bench_decode_step),
-    ]
+    chips = tuple(args.chip) if args.chip else DEFAULT_CHIPS
+    ctx = RunContext(tiny=args.tiny, chips=chips)
+    selected = [s.name for s in SUITE.select(args.only)]
+    if not selected:
+        print(f"no suite matches --only {args.only!r} "
+              f"(suites: {', '.join(SUITE.names())})")
+        return 2
+
     print("name,us_per_call,derived")
-    for name, fn in benches:
-        if args.only and args.only not in name:
-            continue
-        fn()
+    records = SUITE.run(only=args.only, ctx=ctx, echo=print)
+
+    # Default trajectory documents accumulate at the repo root regardless
+    # of the invoking cwd.
+    repo_root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    out_path = args.json or bench_io.default_run_path(repo_root)
+    for p in bench_io.write_run(out_path, records, ctx.fidelity):
+        print(f"# wrote {p}")
+
+    if args.update_baseline:
+        base_dir = args.baseline or DEFAULT_BASELINE_DIR
+        for p in bench_io.write_baselines(base_dir, records, ctx.fidelity):
+            print(f"# baseline {p}")
+        return 0
+
+    if args.baseline:
+        try:
+            base_fidelity, baseline = bench_io.read_baselines(args.baseline)
+        except SchemaError as e:
+            print(f"# baseline error: {e}")
+            return 2
+        if base_fidelity != ctx.fidelity:
+            print(
+                f"# baseline fidelity {base_fidelity!r} != run fidelity "
+                f"{ctx.fidelity!r}; re-run with "
+                f"{'--tiny' if base_fidelity == 'tiny' else 'no --tiny'} "
+                f"or --update-baseline"
+            )
+            return 2
+        baseline = [b for b in baseline if b.suite in selected]
+        report = compare(records, baseline)
+        print(report.summary())
+        return 0 if report.ok else 1
+
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

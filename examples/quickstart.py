@@ -3,8 +3,6 @@
     PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
-import jax.numpy as jnp
 
 from repro.core import hw
 from repro.core.planner import plan_matmul

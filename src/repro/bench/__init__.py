@@ -1,0 +1,35 @@
+"""Structured benchmark results: records, timing, IO, suites, regression gate.
+
+The subsystem that turns print-as-you-go benchmarking into a tracked
+time series: every benchmark row is a `BenchResult` (measured median/IQR
+wall time + deterministic modeled metrics + full provenance), runs are
+written as ``BENCH_<timestamp>.json`` documents, and `compare` diffs a
+run against the committed baselines under ``benchmarks/baselines/`` with
+per-metric tolerances — tight for modeled quantities, informational for
+wall clock.
+"""
+
+from repro.bench import compare, io, record, suite, timing
+from repro.bench.compare import Report, Tolerance, metric_tolerance
+from repro.bench.record import BenchResult, Provenance, SchemaError
+from repro.bench.suite import BenchSuite, Recorder, RunContext
+from repro.bench.timing import Timing, measure
+
+__all__ = [
+    "compare",
+    "io",
+    "record",
+    "suite",
+    "timing",
+    "Report",
+    "Tolerance",
+    "metric_tolerance",
+    "BenchResult",
+    "Provenance",
+    "SchemaError",
+    "BenchSuite",
+    "Recorder",
+    "RunContext",
+    "Timing",
+    "measure",
+]

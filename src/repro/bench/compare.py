@@ -1,0 +1,231 @@
+"""Diff a benchmark run against committed baselines, with tolerances.
+
+Two kinds of numbers flow through the harness and they need opposite
+treatment:
+
+* **Modeled quantities** (roofline fractions, vertex counts, skew
+  spreads, AMP best sizes) are pure cost-model arithmetic — identical on
+  every host — so they are *gated*: drift beyond a tight tolerance fails
+  CI.  These are the paper's reproducible artifacts; changing them is a
+  deliberate act recorded by committing a new baseline.
+* **Wall-clock measurements** (us_per_call) are host-relative, so they
+  are *informational*: reported in the diff, never failing the gate.
+
+The tolerance policy is name-based (`metric_tolerance`): integer count
+metrics must match exactly, fraction-like metrics get a small absolute
+band (planner output is deterministic, but this keeps baselines robust
+to benign float-formatting churn), byte/size metrics a tiny relative
+band.  Unknown numeric metrics default to informational so a new metric
+never bricks CI before a baseline exists for it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.bench.record import BenchResult
+
+_EXACT_NAMES = frozenset(
+    {
+        "vertices",
+        "matmuls",
+        "left",
+        "right",
+        "square",
+        "unplanned",
+        "best_n",
+        "grid_steps",
+        "repeats",
+    },
+)
+_FRACTION_SUFFIXES = ("frac", "fraction", "util", "spread", "min", "max")
+
+
+@dataclasses.dataclass(frozen=True)
+class Tolerance:
+    """|current - baseline| <= abs + rel * |baseline| passes."""
+
+    abs: float = 0.0
+    rel: float = 0.0
+    gated: bool = True
+
+    def allows(self, current: float, baseline: float) -> bool:
+        return abs(current - baseline) <= self.abs + self.rel * abs(baseline)
+
+
+EXACT = Tolerance()
+FRACTION = Tolerance(abs=5e-3)
+SIZE = Tolerance(rel=1e-6)
+MODELED_RATE = Tolerance(rel=1e-3)
+INFORMATIONAL = Tolerance(rel=0.5, gated=False)
+
+
+def metric_tolerance(metric: str) -> Tolerance:
+    """Tolerance class for a metric name (see module docstring)."""
+    if metric in ("us_per_call", "us_iqr"):
+        return INFORMATIONAL
+    # XLA-derived measurements (costprobe's cost_analysis terms): these
+    # move with jax/XLA versions, not with our cost model — never gate,
+    # whatever suffix they happen to carry.
+    if metric.startswith(("hlo_", "collective_")) or metric == "useful_ratio":
+        return INFORMATIONAL
+    if metric in _EXACT_NAMES:
+        return EXACT
+    tail = metric.rsplit("_", 1)[-1]
+    if tail in _FRACTION_SUFFIXES:
+        return FRACTION
+    if tail in ("tflops", "gflops", "flops"):
+        return MODELED_RATE
+    if tail in ("bytes", "mib", "kib", "gib"):
+        return SIZE
+    return INFORMATIONAL
+
+
+@dataclasses.dataclass(frozen=True)
+class Entry:
+    """One comparison outcome for (record, metric)."""
+
+    record: str
+    metric: str | None
+    status: str  # ok | fail | drift | missing_record | new_record |
+    #              missing_metric | new_metric | info_changed
+    gated: bool
+    current: float | None = None
+    baseline: float | None = None
+    detail: str = ""
+
+    def line(self) -> str:
+        tag = "GATED" if self.gated else "info"
+        metric = self.metric or "-"
+        vals = ""
+        if self.baseline is not None or self.current is not None:
+            vals = f" baseline={self.baseline} current={self.current}"
+        detail = f" ({self.detail})" if self.detail else ""
+        return f"[{tag}] {self.status:<14} {self.record}:{metric}{vals}{detail}"
+
+
+@dataclasses.dataclass
+class Report:
+    """Comparison result: every (record, metric) pair accounted for."""
+
+    entries: list[Entry]
+
+    @property
+    def failures(self) -> list[Entry]:
+        return [e for e in self.entries if e.gated and e.status != "ok"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for e in self.entries:
+            out[e.status] = out.get(e.status, 0) + 1
+        return out
+
+    def summary(self, verbose: bool = False) -> str:
+        counts = ", ".join(f"{k}={v}" for k, v in sorted(self.counts().items()))
+        head = "bench-compare: " + ("OK" if self.ok else "FAIL") + f" ({counts})"
+        lines = [head]
+        shown = self.entries if verbose else self.failures
+        lines.extend(e.line() for e in shown)
+        if not verbose:
+            notes = [
+                e
+                for e in self.entries
+                if not e.gated and e.status not in ("ok", "fail")
+            ]
+            lines.extend(e.line() for e in notes)
+        return "\n".join(lines)
+
+
+def _compare_record(cur: BenchResult, base: BenchResult) -> list[Entry]:
+    entries = []
+    for metric, base_v in base.metrics.items():
+        tol = metric_tolerance(metric)
+        if metric not in cur.metrics:
+            entries.append(
+                Entry(cur.name, metric, "missing_metric", gated=tol.gated),
+            )
+            continue
+        cur_v = cur.metrics[metric]
+        if tol.allows(cur_v, base_v):
+            status = "ok"
+        else:
+            status = "fail" if tol.gated else "drift"
+        entries.append(
+            Entry(
+                cur.name,
+                metric,
+                status,
+                gated=tol.gated,
+                current=cur_v,
+                baseline=base_v,
+                detail=f"tol abs={tol.abs:g} rel={tol.rel:g}",
+            ),
+        )
+    for metric in cur.metrics:
+        if metric not in base.metrics:
+            entries.append(
+                Entry(cur.name, metric, "new_metric", gated=False),
+            )
+    for key, base_s in base.info.items():
+        cur_s = cur.info.get(key)
+        if cur_s != base_s:
+            entries.append(
+                Entry(
+                    cur.name,
+                    key,
+                    "info_changed",
+                    gated=True,
+                    detail=f"baseline={base_s!r} current={cur_s!r}",
+                ),
+            )
+    for key in cur.info:
+        if key not in base.info:
+            entries.append(
+                Entry(cur.name, key, "new_metric", gated=False),
+            )
+    if base.us_per_call is not None and cur.us_per_call is not None:
+        tol = metric_tolerance("us_per_call")
+        if tol.allows(cur.us_per_call, base.us_per_call):
+            status = "ok"
+        else:
+            status = "drift"
+        entries.append(
+            Entry(
+                cur.name,
+                "us_per_call",
+                status,
+                gated=False,
+                current=cur.us_per_call,
+                baseline=base.us_per_call,
+            ),
+        )
+    return entries
+
+
+def compare(
+    current: list[BenchResult],
+    baseline: list[BenchResult],
+) -> Report:
+    """Diff `current` records against `baseline` records by name.
+
+    A baseline record absent from the run is a gated failure (a suite
+    silently dropped coverage); a run record absent from the baseline is
+    informational (new coverage — commit an updated baseline to start
+    gating it).
+    """
+    cur_by_name = {r.name: r for r in current}
+    base_by_name = {r.name: r for r in baseline}
+    entries: list[Entry] = []
+    for name, base in base_by_name.items():
+        if name not in cur_by_name:
+            entries.append(Entry(name, None, "missing_record", gated=True))
+            continue
+        entries.extend(_compare_record(cur_by_name[name], base))
+    for name in cur_by_name:
+        if name not in base_by_name:
+            entries.append(Entry(name, None, "new_record", gated=False))
+    return Report(entries=entries)

@@ -1,0 +1,267 @@
+"""Structured benchmark records — the repo's machine-readable perf surface.
+
+Every number a benchmark reports becomes a `BenchResult`: the measured
+wall time (median/IQR over repeats, host-relative), the deterministic
+*modeled* quantities that reproduce the paper's artifacts (roofline
+fractions, vertex counts, skew spreads, AMP max-sizes), and full
+provenance — which chip the planner targeted, the resolved
+`MatmulConfig`, the chosen plan (schedule + blocks), jax/python
+versions, and the git sha the run came from.
+
+The modeled metrics are the regression surface: they are pure cost-model
+arithmetic, bit-deterministic across hosts, so CI can diff them against
+committed baselines with tight tolerances (see `repro.bench.compare`).
+Wall-clock numbers ride along as informational context.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+import platform
+import subprocess
+from typing import Any, Mapping
+
+SCHEMA_VERSION = 1
+
+
+class SchemaError(ValueError):
+    """A benchmark-results document does not match the expected schema."""
+
+
+@functools.lru_cache(maxsize=1)
+def git_sha() -> str:
+    """Short sha of the checkout this code lives in ("unknown" off-git).
+
+    Resolved against this file's directory, not the process cwd, so the
+    recorded provenance names the repo that produced the numbers even
+    when the benchmark CLI is launched from elsewhere.
+    """
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True,
+            text=True,
+            timeout=10,
+            check=False,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        )
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else "unknown"
+
+
+def _jax_version() -> str:
+    try:
+        import jax
+
+        return jax.__version__
+    except Exception:  # pragma: no cover - jax is a hard dep in practice
+        return "unknown"
+
+
+def _plan_fields(plan: Any) -> dict[str, Any]:
+    """Normalize a plan argument into Provenance's plan fields.
+
+    Accepts a `MatmulCost` (duck-typed via `plan_provenance()`), a plain
+    dict of the fields, or None.
+    """
+    if plan is None:
+        return {}
+    if hasattr(plan, "plan_provenance"):
+        plan = plan.plan_provenance()
+    if not isinstance(plan, Mapping):
+        raise TypeError(
+            f"plan must be a MatmulCost, a provenance dict, or None; "
+            f"got {type(plan).__name__}",
+        )
+    allowed = {"schedule", "blocks", "batch_grid", "grid_steps"}
+    fields = {k: plan[k] for k in allowed if k in plan}
+    if fields.get("blocks") is not None:
+        fields["blocks"] = tuple(int(b) for b in fields["blocks"])
+    return fields
+
+
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """Where a record's numbers came from: resolved config + chosen plan."""
+
+    chip: str
+    amp: float
+    backend: str
+    plan_mode: str
+    jax_version: str
+    python_version: str
+    git_sha: str
+    schedule: str | None = None
+    blocks: tuple[int, int, int] | None = None
+    batch_grid: bool | None = None
+    grid_steps: int | None = None
+
+    @classmethod
+    def capture(cls, config: Any = None, plan: Any = None) -> "Provenance":
+        """Snapshot the active `mm_config` resolution plus a chosen plan.
+
+        `config` defaults to the context-resolved `MatmulConfig`, so a
+        suite running under ``with mm_config(chip=...):`` records the chip
+        it actually planned for.  `plan` is a `MatmulCost` (or provenance
+        dict) for the record's headline matmul, when there is one.
+        """
+        from repro.core import config as mmcfg
+
+        cfg = config if config is not None else mmcfg.current()
+        return cls(
+            **cfg.provenance(),
+            jax_version=_jax_version(),
+            python_version=platform.python_version(),
+            git_sha=git_sha(),
+            **_plan_fields(plan),
+        )
+
+    def to_json(self) -> dict[str, Any]:
+        d = dataclasses.asdict(self)
+        if d["blocks"] is not None:
+            d["blocks"] = list(d["blocks"])
+        return d
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "Provenance":
+        if not isinstance(d, Mapping):
+            raise SchemaError(f"provenance must be an object, got {type(d)}")
+        required = {
+            "chip",
+            "amp",
+            "backend",
+            "plan_mode",
+            "jax_version",
+            "python_version",
+            "git_sha",
+        }
+        missing = required - set(d)
+        if missing:
+            raise SchemaError(f"provenance missing fields {sorted(missing)}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise SchemaError(f"provenance has unknown fields {sorted(unknown)}")
+        kw = dict(d)
+        if kw.get("blocks") is not None:
+            kw["blocks"] = tuple(int(b) for b in kw["blocks"])
+        return cls(**kw)
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, int):
+        return str(v)
+    if isinstance(v, float):
+        if not math.isfinite(v):
+            return str(v)
+        if v == int(v) and abs(v) < 1e15:
+            return str(int(v))
+        return f"{v:.3f}" if 1e-3 <= abs(v) < 1e4 else f"{v:g}"
+    return str(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchResult:
+    """One benchmark row: a name, its axes, measurement, and modeled metrics.
+
+    `metrics` holds numeric quantities (the comparable surface); `info`
+    holds short strings (chosen schedule, plan spelling, family) that are
+    compared for exact equality; `axes` identifies the point in the sweep
+    (chip, ratio, problem dims, arch, ...).  `us_per_call` is the median
+    measured wall time over `repeats` timing repetitions (None when the
+    row is modeled-only), `us_iqr` its interquartile range.
+    """
+
+    name: str
+    suite: str
+    axes: dict[str, Any]
+    metrics: dict[str, float]
+    info: dict[str, str]
+    provenance: Provenance
+    us_per_call: float | None = None
+    us_iqr: float | None = None
+    repeats: int = 0
+
+    def to_json(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "suite": self.suite,
+            "axes": dict(self.axes),
+            "metrics": dict(self.metrics),
+            "info": dict(self.info),
+            "provenance": self.provenance.to_json(),
+            "us_per_call": self.us_per_call,
+            "us_iqr": self.us_iqr,
+            "repeats": self.repeats,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping[str, Any]) -> "BenchResult":
+        if not isinstance(d, Mapping):
+            raise SchemaError(f"record must be an object, got {type(d)}")
+        required = {"name", "suite", "axes", "metrics", "info", "provenance"}
+        missing = required - set(d)
+        if missing:
+            raise SchemaError(
+                f"record {d.get('name', '?')!r} missing fields {sorted(missing)}",
+            )
+        for field in ("name", "suite"):
+            if not isinstance(d[field], str) or not d[field]:
+                raise SchemaError(f"record {field} must be a non-empty string")
+        for field in ("axes", "metrics", "info"):
+            if not isinstance(d[field], Mapping):
+                raise SchemaError(f"record {d['name']!r}: {field} must be an object")
+        for k, v in d["metrics"].items():
+            if not isinstance(v, (int, float)) or isinstance(v, bool):
+                raise SchemaError(
+                    f"record {d['name']!r}: metric {k!r} must be numeric, "
+                    f"got {v!r}",
+                )
+        for k, v in d["info"].items():
+            if not isinstance(v, str):
+                raise SchemaError(
+                    f"record {d['name']!r}: info {k!r} must be a string, "
+                    f"got {v!r}",
+                )
+        us = d.get("us_per_call")
+        if us is not None and not isinstance(us, (int, float)):
+            raise SchemaError(f"record {d['name']!r}: bad us_per_call {us!r}")
+        return cls(
+            name=d["name"],
+            suite=d["suite"],
+            axes=dict(d["axes"]),
+            metrics={k: float(v) for k, v in d["metrics"].items()},
+            info=dict(d["info"]),
+            provenance=Provenance.from_json(d["provenance"]),
+            us_per_call=None if us is None else float(us),
+            us_iqr=None if d.get("us_iqr") is None else float(d["us_iqr"]),
+            repeats=int(d.get("repeats", 0)),
+        )
+
+    def csv_row(self) -> str:
+        """The legacy ``name,us_per_call,derived`` stdout row."""
+        us = float("nan") if self.us_per_call is None else self.us_per_call
+        parts = [f"{k}={_fmt(v)}" for k, v in self.metrics.items()]
+        parts += [f"{k}={v}" for k, v in self.info.items()]
+        return f"{self.name},{us:.1f},{';'.join(parts)}"
+
+
+def validate_records(records: list[BenchResult]) -> None:
+    """Cross-record invariants: unique names, finite gated metrics."""
+    seen: set[str] = set()
+    for r in records:
+        if r.name in seen:
+            raise SchemaError(f"duplicate record name {r.name!r}")
+        seen.add(r.name)
+        for k, v in r.metrics.items():
+            if not math.isfinite(v):
+                raise SchemaError(
+                    f"record {r.name!r}: metric {k!r} is not finite ({v!r})",
+                )

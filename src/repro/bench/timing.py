@@ -1,0 +1,72 @@
+"""Wall-clock measurement with per-iteration blocking and robust stats.
+
+The old harness timed ``iters`` calls and only blocked on the *final*
+iteration's output.  Under JAX's async dispatch that lets iterations
+overlap — earlier calls are still executing on the device while later
+calls are being enqueued — so the reported per-call time is an
+under-estimate whose error grows with ``iters``.  `measure` blocks on
+every iteration's result before the clock is read again, and summarizes
+with the median over independent repeats (plus the IQR as a stability
+signal) instead of a single mean, so one noisy repeat cannot skew the
+reported number.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """Measured wall time: median/IQR in microseconds over `repeats`."""
+
+    median_us: float
+    iqr_us: float
+    repeats: int
+    iters: int
+
+    @property
+    def us_per_call(self) -> float:
+        return self.median_us
+
+
+def measure(
+    fn: Callable[..., Any],
+    *args: Any,
+    iters: int = 3,
+    repeats: int = 5,
+) -> Timing:
+    """Time ``fn(*args)``: median per-call microseconds over ``repeats``.
+
+    One untimed warmup call triggers compilation.  Each repeat times
+    ``iters`` calls, blocking on every call's output (`block_until_ready`
+    inside the loop — async dispatch cannot overlap iterations), and
+    contributes elapsed/iters.  The median over repeats is the headline
+    number; the interquartile range is reported alongside so consumers
+    can see how stable the measurement was.
+    """
+    if iters < 1 or repeats < 1:
+        raise ValueError(f"iters and repeats must be >= 1, got {iters}/{repeats}")
+    jax.block_until_ready(fn(*args))
+    per_call_us = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(*args))
+        per_call_us.append((time.perf_counter() - t0) / iters * 1e6)
+    if len(per_call_us) >= 2:
+        q1, _, q3 = statistics.quantiles(per_call_us, n=4)
+        iqr = q3 - q1
+    else:
+        iqr = 0.0
+    return Timing(
+        median_us=statistics.median(per_call_us),
+        iqr_us=iqr,
+        repeats=repeats,
+        iters=iters,
+    )

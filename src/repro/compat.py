@@ -24,6 +24,19 @@ def axis_size(axis_name: str) -> int:
     return jax.lax.psum(1, axis_name)
 
 
+def cost_analysis(compiled) -> dict:
+    """compiled.cost_analysis() as a dict across JAX versions.
+
+    Releases before ~0.5 return a single-element list of per-device
+    dicts; newer releases return the dict directly.  Either way the
+    caller wants one mapping of cost keys.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
     """jax.make_mesh with explicitly-Auto axis types where supported.
 

@@ -77,6 +77,16 @@ class MatmulConfig:
     def replace(self, **kw) -> "MatmulConfig":
         return dataclasses.replace(self, **kw)
 
+    def provenance(self) -> dict:
+        """The resolved planning knobs as a flat record-friendly dict.
+
+        Benchmark records (repro.bench) store this instead of the full
+        spec so a committed result names the chip/amp/backend/plan_mode
+        it was produced under without serializing a ChipSpec.
+        """
+        return {"chip": self.chip_spec.name, "amp": self.amp,
+                "backend": self.backend, "plan_mode": self.plan_mode}
+
 
 _FIELDS = frozenset(f.name for f in dataclasses.fields(MatmulConfig))
 

@@ -159,6 +159,17 @@ class MatmulCost:
             return "grid-overhead"
         return "compute" if self.compute_s >= self.memory_s else "memory"
 
+    def plan_provenance(self) -> dict:
+        """The chosen plan as a flat record-friendly dict.
+
+        This is the provenance surface benchmark records carry (see
+        repro.bench.record.Provenance): enough to answer "which schedule
+        and blocks produced this number" without re-running the planner.
+        """
+        p = self.plan
+        return {"schedule": p.schedule, "blocks": (p.bm, p.bk, p.bn),
+                "batch_grid": p.batch_grid, "grid_steps": self.grid_steps}
+
     def explain(self) -> str:
         d, p = self.dims, self.plan
         batch = f" batch={d.batch}{'(grid)' if p.batch_grid else '(fold)'}" \

@@ -213,5 +213,8 @@ def sweep_aspect_ratios(total_elems: int, ratios: Iterable[float],
             naive_bound=naive.bound, planned_bound=planned.bound,
             schedule=planned.plan.schedule,
             plan=(planned.plan.bm, planned.plan.bk, planned.plan.bn),
+            # full MatmulCost of the winning plan, for in-process consumers
+            # (benchmark records attach its plan_provenance()).
+            planned_cost=planned,
         ))
     return out

@@ -22,8 +22,7 @@ import dataclasses
 import json
 import re
 
-import numpy as np
-
+from repro import compat
 from repro.core import hw
 
 # bytes-on-wire multiplier per collective, ring algorithm, large-N limit:
@@ -163,7 +162,7 @@ def analyze(compiled, hlo_text: str, *, arch: str, shape: str, mesh: str,
             dtype_bytes: int = 2, ici_links: int = 4,
             chip: hw.ChipSpec = hw.TPU_V5E) -> RooflineReport:
     """Build a RooflineReport from a compiled executable + its HLO text."""
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     hbm_bytes = float(ca.get("bytes accessed", 0.0))
     coll = collective_stats(hlo_text)

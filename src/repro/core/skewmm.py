@@ -49,7 +49,6 @@ import jax.numpy as jnp
 
 from repro.core import config, epilogue as epilogue_mod, hw
 from repro.core.config import MatmulConfig, mm_config  # noqa: F401  (re-export)
-from repro.core.costmodel import MatmulCost
 from repro.core.epilogue import Epilogue  # noqa: F401  (re-export)
 from repro.core.planner import plan_matmul
 

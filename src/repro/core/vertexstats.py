@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import config, hw
-from repro.core.costmodel import MatmulCost, MatmulDims
+from repro.core.costmodel import MatmulDims
 from repro.core.planner import plan_matmul
 
 
@@ -25,6 +25,13 @@ class VertexStats:
     vmem_bytes: int
     bound: str
     roofline_fraction: float
+    schedule: str | None = None  # chosen plan, for record provenance
+    blocks: tuple[int, int, int] | None = None
+
+    def plan_provenance(self) -> dict:
+        """Plan fields in the shape benchmark records expect."""
+        return {"schedule": self.schedule, "blocks": self.blocks,
+                "grid_steps": self.vertex_count}
 
     def row(self) -> str:
         m, k, n = self.dims
@@ -51,6 +58,8 @@ def stats_for(m: int, k: int, n: int, *, dtype_bytes: int = 2,
         vmem_bytes=cost.vmem_bytes,
         bound=cost.bound,
         roofline_fraction=cost.roofline_fraction(chip),
+        schedule=cost.plan.schedule,
+        blocks=(cost.plan.bm, cost.plan.bk, cost.plan.bn),
     )
 
 

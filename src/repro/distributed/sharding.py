@@ -10,11 +10,7 @@ configs alike.
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -87,7 +83,6 @@ _BLOCKDIAG = {"w_r", "w_i"}     # (nb, bw, bw): shard nb
 def param_spec(path_names: list[str], leaf, mesh: Mesh) -> P:
     name = path_names[-1]
     ndim = len(leaf.shape)
-    stack = ndim  # leading stacked dims filled with None below
 
     def base(rule: P, arity: int) -> P:
         lead = (None,) * (ndim - arity)

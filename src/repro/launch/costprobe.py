@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import all_arch_ids, get_config
 from repro.core import config as mmcfg
 from repro.core import roofline
@@ -49,9 +50,9 @@ from repro.models.layers import rmsnorm
 
 # Force single-trip attention chunking in all probes (see module docstring).
 layers_mod.CHUNK_OVERRIDE = (1 << 30, 1 << 30)
-from repro.models.model import build_model, model_flops, param_shapes
+from repro.models.model import model_flops, param_shapes
 from repro.optim.adamw import AdamW
-from repro.serve import engine, encdec_engine, kvcache
+from repro.serve import engine, kvcache
 from repro.train.loss import chunked_softmax_xent
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -86,7 +87,7 @@ ZERO = ProbeCost(0.0, 0.0, 0.0, {})
 def _measure(fn, *sds_args, out_shardings=None) -> ProbeCost:
     lowered = jax.jit(fn, out_shardings=out_shardings).lower(*sds_args)
     compiled = lowered.compile()
-    ca = compiled.cost_analysis()
+    ca = compat.cost_analysis(compiled)
     cs = roofline.collective_stats(compiled.as_text())
     return ProbeCost(float(ca.get("flops", 0.0)),
                      float(ca.get("bytes accessed", 0.0)),
@@ -220,7 +221,6 @@ class CellProber:
 
     # ------------------------------------------------------------- train
     def probe_train(self) -> ProbeCost:
-        cfg = self.cfg
         cell = self.cell
         b_micro = cell.global_batch // self.n_micro
         s = cell.seq_len
@@ -306,7 +306,6 @@ class CellProber:
         key = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
         def init(k):
-            import dataclasses as dc
             p = {"embed": jnp.zeros((cfg.vocab_size, cfg.d_model),
                                     self.dtype),
                  "final_norm": jnp.zeros((cfg.d_model,), self.dtype)}
@@ -506,6 +505,38 @@ class CellProber:
         return rec
 
 
+def _bench_record(rec: dict):
+    """One probe cell as a structured BenchResult (repro.bench).
+
+    The roofline probe emits through the same record path as the
+    benchmark harness so costprobe runs join the tracked perf series:
+    the deterministic roofline terms land in `metrics`, the wall time of
+    the probe itself rides along informationally (it is compile time,
+    not device time).
+    """
+    from repro.bench.record import BenchResult, Provenance
+
+    name = f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+    # hlo_/collective_-prefixed names (and useful_ratio) are informational
+    # by policy in repro.bench.compare: they come from XLA's cost_analysis,
+    # which moves with jax versions, unlike the cost-model metrics.
+    metrics = {
+        "hlo_roofline_frac": rec["roofline_fraction"],
+        "useful_ratio": rec["useful_ratio"],
+        "hlo_tflops": rec["hlo_flops"] / 1e12,
+        "hlo_gib": rec["hlo_bytes"] / 2**30,
+        "collective_gib": rec["collective_bytes"] / 2**30,
+    }
+    return BenchResult(
+        name=name, suite="roofline",
+        axes={"arch": rec["arch"], "shape": rec["shape"],
+              "mesh": rec["mesh"], "chips": rec["chips"]},
+        metrics=metrics,
+        info={"dominant": rec["dominant"]},
+        provenance=Provenance.capture(),
+        us_per_call=rec["probe_s"] * 1e6, us_iqr=None, repeats=1)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -514,6 +545,9 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default=os.path.abspath(RESULTS_DIR))
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--bench-json", default=None,
+                    help="also write the probed cells as structured "
+                         "BenchResult records (repro.bench schema)")
     mmcfg.add_cli_args(ap)
     args = ap.parse_args()
 
@@ -522,6 +556,7 @@ def main():
     os.makedirs(args.out, exist_ok=True)
     import traceback
     failures = []
+    bench_records = []
     with mmcfg.scope_from_args(args):
         for arch, shape in cells:
             path = os.path.join(args.out,
@@ -532,6 +567,8 @@ def main():
                 rec = CellProber(arch, shape, args.mesh).run()
                 with open(path, "w") as fh:
                     json.dump(rec, fh, indent=2, default=float)
+                if args.bench_json:
+                    bench_records.append(_bench_record(rec))
                 print(f"[probe] {arch} {shape} {args.mesh}: "
                       f"dom={rec['dominant']} "
                       f"frac={rec['roofline_fraction']:.3f} "
@@ -540,6 +577,12 @@ def main():
             except Exception as e:  # noqa: BLE001
                 traceback.print_exc()
                 failures.append((arch, shape, repr(e)))
+    if args.bench_json:
+        # Written even when empty (all cells skipped/failed) so the
+        # requested output always exists and says what happened.
+        from repro.bench import io as bench_io
+        for p in bench_io.write_run(args.bench_json, bench_records, "full"):
+            print(f"[probe] wrote {p} ({len(bench_records)} records)")
     if failures:
         print(f"[probe] {len(failures)} failures: {failures}")
         raise SystemExit(1)

@@ -15,7 +15,6 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.core import config as mmcfg
-from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
 from repro.serve import encdec_engine, engine
 

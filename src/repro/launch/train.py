@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import argparse
 
-import jax
 
 from repro.configs.base import get_config
 from repro.core import config as mmcfg

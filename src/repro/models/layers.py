@@ -3,7 +3,6 @@ repro.core.skewmm so the paper's planner sees the full workload."""
 
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

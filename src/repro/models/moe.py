@@ -17,7 +17,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import constrain
 from repro.models import layers
 from repro.models.layers import linear_init
 

@@ -1,0 +1,256 @@
+"""Tests for the structured benchmark-results subsystem (repro.bench).
+
+Covers: record round-trip through the JSON schema, the tolerance
+comparison (pass / fail / missing-metric / new-metric / missing-record /
+wall-clock drift), the timing fix (every iteration blocked, median over
+repeats), a --tiny smoke of every registered suite, provenance fields,
+and the CLI baseline gate end to end (update -> clean pass -> perturbed
+modeled fraction -> non-zero exit).
+"""
+
+import json
+import os
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+from repro.bench import compare as cmp_mod
+from repro.bench import io as bench_io
+from repro.bench.record import BenchResult, Provenance, SchemaError
+from repro.bench.suite import RunContext
+from repro.bench.timing import measure
+
+_REPO = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_REPO, "benchmarks"))
+import run as bench_run  # noqa: E402
+
+
+def _record(name="r1", suite="s1", metrics=None, info=None, us=None):
+    return BenchResult(
+        name=name, suite=suite, axes={"n": 4},
+        metrics=dict(metrics if metrics is not None else {"frac": 0.9}),
+        info=dict(info or {}),
+        provenance=Provenance.capture(
+            plan={"schedule": "k_inner", "blocks": (128, 128, 128)}),
+        us_per_call=us, us_iqr=None if us is None else 0.1,
+        repeats=0 if us is None else 3)
+
+
+# ------------------------------------------------------------- round-trip
+def test_record_roundtrip(tmp_path):
+    recs = [_record("a", metrics={"frac": 0.5, "vertices": 7}, us=12.5),
+            _record("b", suite="s2", info={"schedule": "a_resident"})]
+    path = str(tmp_path / "out.json")
+    written = bench_io.write_run(path, recs, "tiny")
+    assert written[0] == path
+    # per-suite siblings, one per suite
+    assert sorted(os.path.basename(p) for p in written[1:]) == [
+        "out.s1.json", "out.s2.json"]
+    meta, back = bench_io.read_run(path)
+    assert meta["fidelity"] == "tiny"
+    assert meta["schema_version"] == 1
+    assert back == recs
+
+
+def test_schema_rejects_bad_documents(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as fh:
+        json.dump({"schema_version": 99, "fidelity": "tiny",
+                   "records": []}, fh)
+    with pytest.raises(SchemaError):
+        bench_io.read_run(path)
+    r = _record().to_json()
+    del r["metrics"]
+    with pytest.raises(SchemaError):
+        BenchResult.from_json(r)
+    r2 = _record().to_json()
+    r2["metrics"]["frac"] = "not-a-number"
+    with pytest.raises(SchemaError):
+        BenchResult.from_json(r2)
+
+
+def test_duplicate_record_names_rejected(tmp_path):
+    with pytest.raises(SchemaError):
+        bench_io.write_run(str(tmp_path / "d.json"),
+                           [_record("same"), _record("same")], "tiny")
+
+
+# ------------------------------------------------------------- tolerances
+def test_compare_pass_and_gated_fail():
+    base = [_record(metrics={"frac": 0.900, "vertices": 32})]
+    ok = cmp_mod.compare(
+        [_record(metrics={"frac": 0.9004, "vertices": 32})], base)
+    assert ok.ok, ok.summary(verbose=True)
+    bad = cmp_mod.compare(
+        [_record(metrics={"frac": 0.92, "vertices": 32})], base)
+    assert not bad.ok
+    assert [e.metric for e in bad.failures] == ["frac"]
+    # integer count metrics are exact
+    off1 = cmp_mod.compare(
+        [_record(metrics={"frac": 0.900, "vertices": 33})], base)
+    assert not off1.ok
+
+
+def test_compare_missing_and_new_metric():
+    base = [_record(metrics={"frac": 0.9, "util": 1.0})]
+    cur = [_record(metrics={"frac": 0.9, "brand_new": 123.0})]
+    rep = cmp_mod.compare(cur, base)
+    statuses = {(e.metric, e.status) for e in rep.entries}
+    assert ("util", "missing_metric") in statuses
+    assert ("brand_new", "new_metric") in statuses
+    # losing a gated metric fails; gaining one never does
+    assert [e.metric for e in rep.failures] == ["util"]
+
+
+def test_compare_missing_and_new_record():
+    base = [_record("kept"), _record("dropped")]
+    cur = [_record("kept"), _record("added")]
+    rep = cmp_mod.compare(cur, base)
+    statuses = {(e.record, e.status) for e in rep.entries}
+    assert ("dropped", "missing_record") in statuses
+    assert ("added", "new_record") in statuses
+    assert [e.record for e in rep.failures] == ["dropped"]
+
+
+def test_compare_wallclock_informational():
+    base = [_record(us=100.0)]
+    cur = [_record(us=1000.0)]  # 10x slower: drift, never a gate failure
+    rep = cmp_mod.compare(cur, base)
+    assert rep.ok
+    assert any(e.status == "drift" and e.metric == "us_per_call"
+               for e in rep.entries)
+
+
+def test_compare_info_change_gated():
+    base = [_record(info={"schedule": "k_inner"})]
+    cur = [_record(info={"schedule": "a_resident"})]
+    rep = cmp_mod.compare(cur, base)
+    assert not rep.ok
+    assert rep.failures[0].status == "info_changed"
+
+
+def test_metric_tolerance_policy():
+    assert cmp_mod.metric_tolerance("vertices").abs == 0.0
+    assert cmp_mod.metric_tolerance("vertices").gated
+    assert cmp_mod.metric_tolerance("planned_frac").abs == pytest.approx(5e-3)
+    assert cmp_mod.metric_tolerance("naive_spread").gated
+    assert not cmp_mod.metric_tolerance("us_per_call").gated
+    assert not cmp_mod.metric_tolerance("something_unknown").gated
+    # XLA-derived (costprobe) measurements never gate, whatever the suffix
+    assert not cmp_mod.metric_tolerance("hlo_roofline_frac").gated
+    assert not cmp_mod.metric_tolerance("hlo_gib").gated
+    assert not cmp_mod.metric_tolerance("collective_gib").gated
+    assert not cmp_mod.metric_tolerance("useful_ratio").gated
+
+
+# ----------------------------------------------------------------- timing
+def test_measure_blocks_every_iteration_and_reports_median():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return jnp.zeros((4,))
+
+    t = measure(fn, iters=2, repeats=3)
+    # 1 warmup + iters * repeats timed calls
+    assert len(calls) == 1 + 2 * 3
+    assert t.median_us > 0
+    assert t.iqr_us >= 0
+    assert t.repeats == 3 and t.iters == 2
+    with pytest.raises(ValueError):
+        measure(fn, iters=0)
+
+
+# ------------------------------------------------------------ suite smoke
+TINY_CTX = RunContext(tiny=True, chips=("tpu_v5e",))
+
+
+@pytest.mark.parametrize("suite_name", bench_run.SUITE.names())
+def test_tiny_smoke_every_suite(suite_name):
+    records = bench_run.SUITE.run(only=suite_name, ctx=TINY_CTX)
+    assert records, f"suite {suite_name} produced no records"
+    for r in records:
+        assert r.suite == suite_name
+        # schema-valid: survives a JSON round trip
+        assert BenchResult.from_json(
+            json.loads(json.dumps(r.to_json()))) == r
+        assert r.provenance.chip == "tpu_v5e"
+        assert r.provenance.jax_version
+        assert r.provenance.git_sha
+        assert r.provenance.python_version
+
+
+def test_fig5_records_carry_plan_provenance():
+    records = bench_run.SUITE.run(only="fig5", ctx=TINY_CTX)
+    ratio_rows = [r for r in records if "spread" not in r.name]
+    assert ratio_rows
+    for r in ratio_rows:
+        assert r.provenance.schedule in (
+            "k_inner", "a_resident", "b_resident")
+        assert r.provenance.blocks is not None
+        assert r.provenance.grid_steps >= 1
+        assert r.info["schedule"] == r.provenance.schedule
+        assert r.provenance.plan_mode == "skew_aware"
+        assert r.provenance.amp == pytest.approx(0.45)
+
+
+# --------------------------------------------------------------- CLI gate
+def test_cli_baseline_gate(tmp_path):
+    base_dir = str(tmp_path / "baselines")
+    out = str(tmp_path / "bench.json")
+    common = ["--tiny", "--only", "vertex", "--json", out]
+    assert bench_run.main(common + ["--baseline", base_dir,
+                                    "--update-baseline"]) == 0
+    assert os.path.exists(os.path.join(base_dir, "vertex.json"))
+    # clean re-run passes the gate
+    assert bench_run.main(common + ["--baseline", base_dir]) == 0
+    # perturb a committed modeled fraction beyond tolerance -> exit 1
+    path = os.path.join(base_dir, "vertex.json")
+    with open(path) as fh:
+        doc = json.load(fh)
+    doc["records"][0]["metrics"]["frac"] += 0.05
+    with open(path, "w") as fh:
+        json.dump(doc, fh)
+    assert bench_run.main(common + ["--baseline", base_dir]) == 1
+    # fidelity mismatch is a distinct, explained error
+    assert bench_run.main(["--only", "vertex", "--json", out,
+                           "--baseline", base_dir]) == 2
+
+
+def test_cli_unknown_suite_errors(tmp_path):
+    out = str(tmp_path / "bench.json")
+    assert bench_run.main(["--only", "nope", "--json", out]) == 2
+
+
+# -------------------------------------------------- committed baselines
+def _committed(suite):
+    path = os.path.join(_REPO, "benchmarks", "baselines", f"{suite}.json")
+    _, records = bench_io.read_run(path)
+    return {r.name: r for r in records}
+
+
+def test_committed_fig5_baselines_match_paper_numbers():
+    by_name = _committed("fig5")
+    # PR 1/2 planned fractions at the skew extremes stay >= 0.98
+    assert by_name["fig5_tpu_v5e_skew_256"].metrics[
+        "planned_frac"] >= 0.98
+    assert by_name["fig5_tpu_v5e_oskew_0.00390625"].metrics[
+        "planned_frac"] >= 0.98
+    # the paper's cross-device verdict: IPU flat, GPU skew-sensitive
+    gc200 = by_name["fig5_ipu_gc200_skew_spread"].metrics
+    rtx = by_name["fig5_gpu_rtx2080ti_skew_spread"].metrics
+    assert gc200["naive_spread"] == pytest.approx(0.096, abs=0.01)
+    assert rtx["naive_spread"] == pytest.approx(0.263, abs=0.01)
+    assert gc200["naive_spread"] < rtx["naive_spread"]
+
+
+def test_committed_baselines_gate_a_tiny_run():
+    """The exact comparison CI runs: tiny modeled suites vs committed."""
+    records = bench_run.SUITE.run(only="vertex", ctx=TINY_CTX)
+    fidelity, baseline = bench_io.read_baselines(
+        os.path.join(_REPO, "benchmarks", "baselines"))
+    assert fidelity == "tiny"
+    baseline = [b for b in baseline if b.suite == "vertex"]
+    rep = cmp_mod.compare(records, baseline)
+    assert rep.ok, rep.summary(verbose=True)

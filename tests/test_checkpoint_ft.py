@@ -9,9 +9,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint.ckpt import CheckpointManager
-from repro.distributed import sharding as shd
-from repro.distributed.fault_tolerance import (ElasticPlan, StepFailed,
-                                               StepGuard,
+from repro.distributed.fault_tolerance import (StepFailed, StepGuard,
                                                plan_elastic_restart,
                                                retry_step)
 

@@ -4,12 +4,11 @@ import jax
 from repro.compat import make_mesh
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import hw, roofline
-from repro.core.costmodel import BlockPlan, MatmulDims, cost_matmul
+from repro.core.costmodel import MatmulDims
 from repro.core.planner import plan_matmul, sweep_aspect_ratios
-from repro.core.vertexstats import paper_vertex_table, stats_for
+from repro.core.vertexstats import paper_vertex_table
 
 
 def test_plan_fits_amp_budget():

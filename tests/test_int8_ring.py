@@ -6,7 +6,6 @@ the rest of the suite (which must see 1 device, per the brief)."""
 import subprocess
 import sys
 
-import numpy as np
 
 _SCRIPT = r"""
 import os

@@ -4,7 +4,6 @@ Shape/dtype sweeps per the brief; hypothesis property tests live in
 tests/test_properties.py.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -12,7 +12,6 @@ import pytest
 from repro.configs.base import get_config
 from repro.distributed import sharding as shd
 from repro.models import moe
-from repro.models.model import build_model
 
 RNG = np.random.default_rng(23)
 

@@ -8,7 +8,6 @@ devices this host has.
 import jax
 from repro.compat import make_mesh
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.configs.base import all_arch_ids, get_config
