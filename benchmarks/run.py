@@ -18,6 +18,10 @@ Suites:
   memory_amp  — §2.4/§6 AMP knob vs max problem size + fraction
   census      — beyond-paper: every matmul the zoo actually runs,
                 classified by skew, with planned fractions
+  sparse      — PopSparse-style density-threshold table: modeled
+                block-sparse vs dense across density, skew (fig5 axes)
+                and the chip axis, the crossover density d* per
+                (chip, shape), and the MoE grouped-plan capture proof
   train       — reduced-config train-step wall time per arch family
   decode      — reduced-config decode wall time per arch family
 
@@ -55,6 +59,8 @@ from repro.core.config import mm_config
 from repro.core.costmodel import MatmulCost
 from repro.core.planner import plan_matmul, sweep_aspect_ratios
 from repro.core.vertexstats import paper_vertex_table
+from repro.sparse import LayoutSummary, crossover_density, plan_sparse_matmul
+from repro.sparse.costmodel import SparseMatmulCost
 
 SUITE = BenchSuite()
 
@@ -253,7 +259,12 @@ def tab_lm_matmul_census(rec, ctx):
         with skewmm.plan_capture() as log:
             h, _ = bundle.hidden_fn(params, batch)
             bundle.logits_fn(params, h)
-        n_unplanned = sum(1 for c in log if not isinstance(c, MatmulCost))
+        n_grouped = sum(1 for c in log if isinstance(c, SparseMatmulCost))
+        n_unplanned = sum(
+            1
+            for c in log
+            if not isinstance(c, (MatmulCost, SparseMatmulCost))
+        )
         log = [c for c in log if isinstance(c, MatmulCost)]
         n_left = sum(1 for c in log if c.dims.skew > 1)
         n_right = sum(1 for c in log if c.dims.skew < -1)
@@ -271,6 +282,7 @@ def tab_lm_matmul_census(rec, ctx):
                 "left": n_left,
                 "square": len(log) - n_left - n_right,
                 "right": n_right,
+                "grouped": n_grouped,
                 "unplanned": n_unplanned,
                 "worst_frac": worst,
             },
@@ -280,6 +292,103 @@ def tab_lm_matmul_census(rec, ctx):
                 ),
             },
         )
+
+
+@SUITE.register("sparse")
+def tab_sparse_density_threshold(rec, ctx):
+    """PopSparse-style density-threshold table + MoE grouped capture.
+
+    For each chip and each fig5-style skew point (A's aspect varied at
+    constant A size), the modeled best block-sparse plan is compared
+    against the modeled best dense plan across a density sweep:
+    ``speedup`` = dense_time / sparse_time crosses 1.0 at the chip's
+    crossover density d* (the ``*_crossover`` row), which is by far the
+    highest on the GC200 (uniform-latency SRAM barely pays for block
+    gather — the PopSparse verdict) while the cache/HBM-budgeted GPU and
+    TPU cluster far lower (~0.3-0.4).  All sparse-vs-dense rows are pure
+    cost-model arithmetic, identical at both fidelities.
+
+    The final ``sparse_moe_grouped`` row runs a reduced MoE forward and
+    records how many expert GEMMs were captured as *grouped plans* (with
+    schedule/blocks provenance) — the planner-bypass einsum residue this
+    subsystem eliminates must stay at zero unplanned.
+    """
+    densities = (0.05, 0.1, 0.2, 0.4, 0.7, 1.0)
+    block = (128, 128)
+    total = 4096 * 4096
+    ratios = (2.0**-8, 1.0, 2.0**8)
+    for chip_name in ctx.chips:
+        chip = hw.get_chip(chip_name)
+        with mm_config(chip=chip):
+            for r in ratios:
+                m = max(1, int(round((total * r) ** 0.5)))
+                k = max(1, int(round((total / r) ** 0.5)))
+                n = 4096
+                dense = plan_matmul(m, k, n)
+                for d in densities:
+                    summary = LayoutSummary.balanced(m, k, block, d)
+                    sp = plan_sparse_matmul(summary, n)
+                    rec(
+                        f"sparse_{chip.name}_skew_{r:g}_d{d:g}",
+                        axes={
+                            "chip": chip.name,
+                            "ratio": r,
+                            "density": d,
+                            "m": m,
+                            "k": k,
+                            "n": n,
+                        },
+                        metrics={
+                            "sparse_frac": sp.roofline_fraction(chip),
+                            "dense_frac": dense.roofline_fraction(chip),
+                            "speedup": dense.total_s / sp.total_s,
+                        },
+                        info={
+                            "schedule": sp.plan.schedule,
+                            "bound": sp.bound,
+                        },
+                        plan=sp,
+                    )
+                dstar = crossover_density(m, k, n, block=block)
+                rec(
+                    f"sparse_{chip.name}_skew_{r:g}_crossover",
+                    axes={"chip": chip.name, "ratio": r, "m": m, "k": k,
+                          "n": n},
+                    metrics={"crossover_frac": dstar},
+                )
+
+    # ---- MoE grouped-plan capture proof (reduced config, measured).
+    import dataclasses
+
+    from repro.configs.base import get_config
+    from repro.models import moe
+
+    cfg = get_config("dbrx-132b").reduced()
+    cfg = dataclasses.replace(
+        cfg, n_experts=4, n_experts_per_tok=2, capacity_factor=4.0
+    )
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((2, 16, cfg.d_model), jnp.float32)
+    with skewmm.plan_capture() as log:
+        moe.moe_mlp(x, params, cfg)
+    grouped = [c for c in log if isinstance(c, SparseMatmulCost)]
+    n_unplanned = sum(
+        1 for c in log if isinstance(c, skewmm.UnplannedContraction)
+    )
+    timing = measure(
+        jax.jit(lambda xx: moe.moe_mlp(xx, params, cfg)[0]),
+        x,
+        iters=ctx.iters,
+        repeats=ctx.repeats,
+    )
+    rec(
+        "sparse_moe_grouped",
+        axes={"arch": "dbrx-132b-reduced", "experts": cfg.n_experts},
+        metrics={"grouped": len(grouped), "unplanned": n_unplanned},
+        info={"schedule": grouped[0].plan.schedule if grouped else "none"},
+        plan=grouped[0] if grouped else None,
+        timing=timing,
+    )
 
 
 @SUITE.register("train")

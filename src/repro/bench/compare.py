@@ -32,6 +32,7 @@ _EXACT_NAMES = frozenset(
         "left",
         "right",
         "square",
+        "grouped",
         "unplanned",
         "best_n",
         "grid_steps",

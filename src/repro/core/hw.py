@@ -34,6 +34,14 @@ class ChipSpec:
     # the paper's per-vertex overhead: plans with pathological grid sizes (the
     # "31743 vertices" right-skew blowup) pay this linearly.
     grid_step_overhead_s: float = 120e-9
+    # Achieved fraction of peak compute and streamed bandwidth under
+    # block-gathered (BSR) execution — index maps chasing a nonzero-block
+    # table instead of a regular stride.  This is the knob behind the
+    # PopSparse-style sparse-vs-dense crossover density: chips with
+    # uniform-latency on-chip memory (the GC200) barely pay for gather,
+    # cache-budgeted GPUs pay the most.  Regular-structure grouped
+    # (block-diagonal) kernels do not pay it.
+    sparse_gather_frac: float = 0.7
 
 
 # ----------------------------------------------------------------- registry
@@ -79,6 +87,7 @@ TPU_V5E = register_chip(ChipSpec(
     # Conservative usable VMEM figure; the planner only ever claims
     # amp * vmem_bytes of it (AMP = the paper's availableMemoryProportion knob).
     vmem_bytes=64 * 1024**2,
+    sparse_gather_frac=0.7,
 ), aliases=("v5e",))
 
 # The paper's chips, kept for the comparison benchmarks (modeled numbers).
@@ -90,6 +99,10 @@ IPU_GC200 = register_chip(ChipSpec(
     ici_bw_per_link=350e9 / 4,
     vmem_bytes=918 * 1024**2,    # all memory is on-chip
     grid_step_overhead_s=600e-9, # vertex scheduling is costlier on Poplar
+    # Uniform-latency In-Processor SRAM: block gather is nearly free —
+    # PopSparse's observation that the IPU tolerates sparsity at much
+    # higher density than cache-hierarchy devices.
+    sparse_gather_frac=0.9,
 ), aliases=("gc200",))
 
 GPU_A30 = register_chip(ChipSpec(
@@ -103,6 +116,7 @@ GPU_A30 = register_chip(ChipSpec(
     # VMEM-resident blocks they model.
     vmem_bytes=24 * 1024**2,
     grid_step_overhead_s=0.0,
+    sparse_gather_frac=0.6,
 ), aliases=("a30",))
 
 # The paper's GPU baseline for the skew comparison (Fig. 5): turing-class
@@ -118,6 +132,11 @@ GPU_RTX2080TI = register_chip(ChipSpec(
     vmem_bytes=int(5.5 * 1024**2),
     hbm_bytes=11 * 1024**3,
     grid_step_overhead_s=0.0,
+    # Turing-class GDDR6 + small L2: gathered block streams pay the
+    # steepest per-chip discount here (lowest gather efficiency of the
+    # zoo; the modeled crossover d* also depends on how memory-bound the
+    # dense baseline is, so it is not ordered by this knob alone).
+    sparse_gather_frac=0.55,
 ), aliases=("rtx2080ti", "rtx_2080ti"))
 
 

@@ -123,6 +123,17 @@ def _record(cost) -> None:
         log.append(cost)
 
 
+def record_plan(cost) -> None:
+    """Public capture hook for out-of-module planned entry points.
+
+    The sparse/grouped wrappers in `repro.kernels.ops` have no skewmm
+    wrapper to record through; they append their `SparseMatmulCost` here
+    so `plan_capture()` still sees the complete workload (MoE expert
+    GEMMs included).
+    """
+    _record(cost)
+
+
 def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
            amp: float | None = None, plan_mode: str | None = None,
            chip: hw.ChipSpec | str | None = None,

@@ -16,14 +16,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import config
+from repro.core import config, skewmm as _skewmm
 from repro.core.costmodel import BlockPlan
-from repro.core.epilogue import Epilogue
+from repro.core.epilogue import Epilogue, apply_spec
 from repro.core.planner import plan_matmul
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rglru_scan as _rglru
 from repro.kernels import skew_matmul as _mm
 from repro.kernels import ssd_scan as _ssd
+from repro.sparse import kernels as _sparse_mm
+from repro.sparse.costmodel import SparseMatmulCost
+from repro.sparse.planner import plan_grouped_matmul, plan_sparse_matmul
 
 
 def _on_tpu() -> bool:
@@ -110,6 +113,109 @@ def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
                                          bn=bn, epilogue=ep.spec,
                                          out_dtype=out_dtype or a.dtype,
                                          interpret=interpret)
+    return out[:, :m, :n]
+
+
+def sparse_matmul(a: jax.Array, b: jax.Array, layout, *,
+                  plan: BlockPlan | SparseMatmulCost | None = None,
+                  amp: float | None = None, chip=None,
+                  epilogue: Epilogue | str | None = None,
+                  bias: jax.Array | None = None,
+                  residual: jax.Array | None = None, out_dtype=None,
+                  interpret: bool | None = None) -> jax.Array:
+    """Planned block-sparse matmul.  sparse(a (m, k)) @ b (k, n) -> (m, n).
+
+    `layout` is a `repro.sparse.BlockSparseLayout` over `a`: blocks
+    absent from the structure are treated as exact zeros (never read).
+    The kernel tiles on the layout's block shape; the sparsity-aware
+    planner chooses (schedule, bn) under the `mm_config`-resolved AMP
+    budget when no plan is given, and the chosen plan is recorded into
+    `plan_capture()`.
+    """
+    m, k = a.shape
+    _, n = b.shape
+    if tuple(layout.shape) != (m, k):
+        raise ValueError(
+            f"layout shape {layout.shape} != lhs shape {(m, k)}")
+    cfg = config.resolve(amp=amp, chip=chip, interpret=interpret)
+    ep = Epilogue.parse(epilogue, bias=bias, residual=residual)
+    bm, bk = layout.block_shape
+    if plan is None:
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        cost = plan_sparse_matmul(layout, n, dtype_bytes=dtype_bytes,
+                                  amp=cfg.amp, chip=cfg.chip_spec)
+        _skewmm.record_plan(cost)
+        plan = cost.plan
+    elif isinstance(plan, SparseMatmulCost):
+        plan = plan.plan
+    if (plan.bm, plan.bk) != (bm, bk):
+        raise ValueError(
+            f"plan blocks ({plan.bm}, {plan.bk}) must match the layout "
+            f"block shape ({bm}, {bk})")
+    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
+    bn = min(plan.bn, -(-n // 128) * 128)
+    ap = _pad_to(a, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
+    resp = None if ep.residual is None else _pad_to(ep.residual, (bm, bn))
+    cols, nnz = layout.device_arrays()
+    out = _sparse_mm.block_sparse_matmul_padded(
+        cols, nnz, ap, bp, biasp, resp, bm=bm, bk=bk, bn=bn,
+        schedule=plan.schedule, epilogue=ep.spec,
+        out_dtype=out_dtype or a.dtype, interpret=interpret)
+    return out[:m, :n]
+
+
+def grouped_matmul(a: jax.Array, b: jax.Array, *,
+                   plan: BlockPlan | SparseMatmulCost | None = None,
+                   backend: str | None = None,
+                   amp: float | None = None, chip=None,
+                   epilogue: Epilogue | str | None = None,
+                   residual: jax.Array | None = None, out_dtype=None,
+                   interpret: bool | None = None) -> jax.Array:
+    """Grouped matmul with per-group rhs.  a (g, m, k) @ b (g, k, n).
+
+    The MoE expert-GEMM entry: each group contracts against its own
+    weights (block-diagonal structure).  Always planned and recorded
+    into `plan_capture()` (schedule/blocks provenance); the compute
+    backend follows the resolved `MatmulConfig` — "pallas" runs the
+    grouped kernel, "xla" (the default) keeps the `jnp.einsum` fallback
+    with identical fp32-accumulator + epilogue numerics.
+    """
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    if g != g2 or k != k2:
+        raise ValueError(f"group/contraction mismatch: {a.shape} @ {b.shape}")
+    cfg = config.resolve(backend=backend, amp=amp, chip=chip,
+                         interpret=interpret)
+    ep = Epilogue.parse(epilogue, residual=residual)
+    if ep.bias is not None:
+        raise ValueError("grouped_matmul epilogue supports scale / act / "
+                         "residual; bias is not plumbed per-group")
+    if plan is None:
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        cost = plan_grouped_matmul(g, m, k, n, dtype_bytes=dtype_bytes,
+                                   amp=cfg.amp, chip=cfg.chip_spec)
+        _skewmm.record_plan(cost)
+        plan = cost.plan
+    elif isinstance(plan, SparseMatmulCost):
+        plan = plan.plan
+    out_dtype = out_dtype or a.dtype
+    if cfg.backend != "pallas":
+        z = jnp.einsum("gmk,gkn->gmn", a, b,
+                       preferred_element_type=jnp.float32)
+        z = apply_spec(z, ep.spec, ep.operands())
+        return z.astype(out_dtype)
+    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
+    bm = min(plan.bm, -(-m // 8) * 8)
+    bk = min(plan.bk, -(-k // 128) * 128)
+    bn = min(plan.bn, -(-n // 128) * 128)
+    ap = _pad_to(a, (1, bm, bk))
+    bp = _pad_to(b, (1, bk, bn))
+    resp = None if ep.residual is None else _pad_to(ep.residual, (1, bm, bn))
+    out = _sparse_mm.grouped_matmul_padded(
+        ap, bp, resp, bm=bm, bk=bk, bn=bn, epilogue=ep.spec,
+        out_dtype=out_dtype, interpret=interpret)
     return out[:, :m, :n]
 
 

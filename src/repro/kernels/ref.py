@@ -30,6 +30,34 @@ def matmul_epilogue_ref(a: jax.Array, b: jax.Array, *, bias=None,
     return z.astype(out_dtype or a.dtype)
 
 
+def block_sparse_matmul_ref(a: jax.Array, b: jax.Array, layout, *,
+                            bias=None, residual=None, epilogue=None,
+                            out_dtype=None) -> jax.Array:
+    """Dense-reference oracle for the block-sparse kernels.
+
+    `layout` is a `repro.sparse.BlockSparseLayout` (duck-typed: anything
+    with an `element_mask()`): blocks absent from the structure are
+    exact zeros regardless of the stored values, then the fused-epilogue
+    matmul semantics apply unchanged.
+    """
+    mask = jnp.asarray(layout.element_mask(), a.dtype)
+    return matmul_epilogue_ref(a * mask, b, bias=bias, residual=residual,
+                               epilogue=epilogue, out_dtype=out_dtype)
+
+
+def grouped_matmul_ref(a: jax.Array, b: jax.Array, *, residual=None,
+                       epilogue=None, out_dtype=None) -> jax.Array:
+    """Oracle for the grouped (per-group rhs) matmul:
+    C[g] = epilogue(A[g] @ B[g]), fp32 accumulation, one cast at the end.
+    """
+    from repro.core import epilogue as epilogue_mod
+    ep = epilogue_mod.Epilogue.parse(epilogue, residual=residual)
+    z = jnp.einsum("gmk,gkn->gmn", a, b,
+                   preferred_element_type=jnp.float32)
+    z = epilogue_mod.apply_spec(z, ep.spec, ep.operands())
+    return z.astype(out_dtype or a.dtype)
+
+
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int | None = None,
                   softcap: float = 0.0, scale: float | None = None,

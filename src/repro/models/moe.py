@@ -4,8 +4,11 @@ Design notes (DESIGN.md §4): the classic Mesh-TF one-hot dispatch einsum
 materializes a (tokens, E, capacity) tensor — at deepseek-v3 scale (E=256)
 that is tens of TB and a non-starter.  We instead use the sort/gather
 formulation: tokens are argsorted by expert id, packed into (E, capacity)
-slots (capacity-dropped like Switch), the expert GEMMs run as a grouped
-einsum over the expert-stacked weights (sharded over the "model" axis = EP),
+slots (capacity-dropped like Switch), the expert GEMMs run as *planned*
+grouped matmuls (`repro.kernels.ops.grouped_matmul` — block-diagonal
+structure, recorded into `plan_capture()` with schedule/blocks
+provenance; the resolved `MatmulConfig` backend picks the grouped Pallas
+kernel or the `jnp.einsum` fallback), sharded over the "model" axis = EP,
 and results scatter-add back with the router weights.
 
 The expert GEMMs are exactly the paper's skewed-MM regime (deepseek:
@@ -17,6 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
 from repro.models import layers
 from repro.models.layers import linear_init
 
@@ -93,17 +97,14 @@ def _dispatch_compute_combine(xf, p, cfg, *, n_local_experts: int,
         gathered, mode="drop").reshape(n_local_experts, cap, d)
 
     if cfg.mlp_type == "swiglu":
-        g = jnp.einsum("ecd,edf->ecf", slots, p["w_gate"],
-                       preferred_element_type=jnp.float32)
-        u = jnp.einsum("ecd,edf->ecf", slots, p["w_up"],
-                       preferred_element_type=jnp.float32)
+        g = ops.grouped_matmul(slots, p["w_gate"], out_dtype=jnp.float32)
+        u = ops.grouped_matmul(slots, p["w_up"], out_dtype=jnp.float32)
         h = (jax.nn.silu(g) * u).astype(xf.dtype)
     else:
-        u = jnp.einsum("ecd,edf->ecf", slots, p["w_up"],
-                       preferred_element_type=jnp.float32)
-        h = jax.nn.gelu(u).astype(xf.dtype)
-    y_slots = jnp.einsum("ecf,efd->ecd", h, p["w_down"],
-                         preferred_element_type=jnp.float32)
+        # act fused into the expert GEMM's epilogue (fp32, one cast).
+        h = ops.grouped_matmul(slots, p["w_up"], epilogue="gelu",
+                               out_dtype=xf.dtype)
+    y_slots = ops.grouped_matmul(h, p["w_down"], out_dtype=jnp.float32)
     y_slots = y_slots.reshape(n_local_experts * cap, d)
 
     contrib = jnp.take(y_slots, jnp.minimum(slot, n_local_experts * cap - 1),

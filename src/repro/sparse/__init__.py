@@ -1,0 +1,45 @@
+"""repro.sparse — block-sparse & grouped skewed matmul subsystem.
+
+The dense stack (planner -> schedule-family Pallas kernels -> structured
+epilogues -> benchmark records) mirrored for *block-structured sparsity*,
+after PopSparse (Li et al., 2023): achieved throughput under block
+sparsity depends on block size, density and aspect ratio, with a density
+threshold below which sparse beats dense.
+
+Layers:
+
+* `repro.sparse.layout`    — `BlockSparseLayout` (BSR-style structure:
+  per-row-block nonzero column-block indices) + `LayoutSummary`, the
+  hashable cost-model view.
+* `repro.sparse.kernels`   — Pallas kernels that iterate only nonzero
+  blocks via gather-based (scalar-prefetch) index maps, reusing the
+  dense schedule family and fused-epilogue table, plus the block-diagonal
+  grouped kernel MoE expert GEMMs route through.
+* `repro.sparse.costmodel` — the dense analytic cost model with traffic /
+  FLOPs scaled by per-schedule effective density and a per-chip
+  block-gather efficiency (`ChipSpec.sparse_gather_frac`).
+* `repro.sparse.planner`   — `plan_sparse_matmul` / `plan_grouped_matmul`
+  (AMP-budgeted, `mm_config`-resolved) and `crossover_density`, the
+  modeled sparse-vs-dense break-even density per chip.
+
+Entry points for model code live in `repro.kernels.ops`
+(`sparse_matmul`, `grouped_matmul`).
+"""
+
+from repro.sparse.costmodel import SparseMatmulCost, cost_sparse_matmul
+from repro.sparse.layout import BlockSparseLayout, LayoutSummary
+from repro.sparse.planner import (
+    crossover_density,
+    plan_grouped_matmul,
+    plan_sparse_matmul,
+)
+
+__all__ = [
+    "BlockSparseLayout",
+    "LayoutSummary",
+    "SparseMatmulCost",
+    "cost_sparse_matmul",
+    "crossover_density",
+    "plan_grouped_matmul",
+    "plan_sparse_matmul",
+]

@@ -1,0 +1,239 @@
+"""Sparsity-aware analytic cost model: the dense model, density-scaled.
+
+Same combinator as the dense `repro.core.costmodel`::
+
+    time(plan) = max(compute_term, memory_term) + grid_overhead_term
+
+with the per-schedule block re-visit traffic and MAC volume scaled by the
+layout's *effective density* (nonzero-block count), plus one new chip
+effect: block-gathered execution (index maps chasing `cols`) achieves
+only ``ChipSpec.sparse_gather_frac`` of the chip's peak compute and
+streamed bandwidth.  That single knob is what produces a PopSparse-style
+density threshold d*: at density 1.0 the sparse kernel strictly loses to
+dense (same work, gather-discounted peaks), while A/B traffic and FLOPs
+shrink with density and the dense-C write does not — so sparse wins below
+some d*, higher on chips whose memory system tolerates gather well (the
+GC200's uniform-latency SRAM) and lower on cache-budgeted GPUs.
+
+Per-schedule traffic (NNZ = nonzero blocks, S = padded row width, the
+sparse grid extent; counts are *valid* block visits):
+
+  k_inner     A x gn, B per valid visit x gn, C written once.
+  a_resident  A x 1 (each nonzero block pinned across the n sweep),
+              B per valid visit, C revisited per s (fp32 r-m-w while
+              S > 1) — the right-skew winner, now also the low-density
+              winner since it streams only the nonzero A blocks once.
+  b_resident  modeled honestly as *not* resident: with row-major (CSR)
+              structure the B block index varies with the inner row
+              index, so B re-streams per valid visit and the schedule is
+              dominated by k_inner (a CSC layout would fix this; see
+              ROADMAP).  Kept for kernel parity, excluded from the
+              planner's sparse search.
+
+The "block_diag" (grouped / MoE) kind uses regular index maps — no
+gather —  so it is costed at full peaks (`gathered=False`): the grouped
+expert GEMM models as `groups` dense matmuls plus the shared grid
+machinery, exactly what the grouped kernel executes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import hw
+from repro.core.costmodel import BlockPlan, _ceil_div, _round_up
+from repro.sparse.layout import LayoutSummary
+
+# Schedules the sparse kernels implement; the planner searches only the
+# first two (b_resident is dominated under CSR structure — see module
+# docstring).
+SPARSE_SCHEDULES = ("k_inner", "a_resident", "b_resident")
+PLANNED_SPARSE_SCHEDULES = ("k_inner", "a_resident")
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseMatmulCost:
+    """Evaluated cost of a block-sparse plan (the sparse `MatmulCost`).
+
+    `layout` is the summary the numbers were derived from, `n` the dense
+    rhs/output columns, `plan` the chosen (schedule, blocks).  The
+    provenance surface (`plan_provenance`) matches the dense one so
+    benchmark records and plan captures carry sparse plans unchanged.
+    """
+
+    layout: LayoutSummary
+    n: int
+    plan: BlockPlan
+    dtype_bytes: int
+    compute_s: float
+    memory_s: float
+    overhead_s: float
+    hbm_bytes: int
+    vmem_bytes: int
+    grid_steps: int
+    mxu_utilization: float
+    gathered: bool = True
+
+    @property
+    def density(self) -> float:
+        return self.layout.density
+
+    @property
+    def flops(self) -> int:
+        """Useful FLOPs: only the nonzero blocks contract."""
+        return 2 * self.layout.nnz_elems * self.n
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s) + self.overhead_s
+
+    @property
+    def achieved_flops(self) -> float:
+        return self.flops / self.total_s
+
+    def roofline_fraction(self, chip: hw.ChipSpec) -> float:
+        """Useful-FLOP throughput against the chip's *dense* peak — the
+        PopSparse comparison axis (sparse only pays off when useful
+        throughput clears what dense achieves on the full problem)."""
+        return self.achieved_flops / hw.peak_flops(chip, self.dtype_bytes)
+
+    @property
+    def bound(self) -> str:
+        if self.overhead_s > max(self.compute_s, self.memory_s):
+            return "grid-overhead"
+        return "compute" if self.compute_s >= self.memory_s else "memory"
+
+    def plan_provenance(self) -> dict:
+        p = self.plan
+        return {
+            "schedule": p.schedule,
+            "blocks": (p.bm, p.bk, p.bn),
+            "batch_grid": False,
+            "grid_steps": self.grid_steps,
+        }
+
+    def explain(self) -> str:
+        s, p = self.layout, self.plan
+        kind = f"grouped[{s.groups}]" if s.kind == "block_diag" else "bsr"
+        return (
+            f"sparse-mm {s.m}x{s.k}x{self.n} {kind} d={self.density:.3f} "
+            f"plan ({p.bm},{p.bk},{p.bn}) sched={p.schedule} "
+            f"grid={self.grid_steps} vmem={self.vmem_bytes / 2**20:.2f}MiB "
+            f"compute={self.compute_s * 1e6:.1f}us "
+            f"memory={self.memory_s * 1e6:.1f}us "
+            f"overhead={self.overhead_s * 1e6:.1f}us bound={self.bound} "
+            f"mxu_util={self.mxu_utilization:.3f}"
+        )
+
+
+def sparse_vmem_bytes(
+    summary: LayoutSummary,
+    plan: BlockPlan,
+    dtype_bytes: int,
+    acc_bytes: int = 4,
+) -> int:
+    """Working set per grid step, including the scalar index tables.
+
+    Mirrors `BlockPlan.vmem_bytes` (double-buffered streamed operands;
+    k_inner holds a single fp32 scratch accumulator, the resident
+    schedules accumulate through the revisited output block) plus the
+    whole (cols, nnz) prefetch tables, which live on-chip for the run.
+    Block-diagonal (grouped) layouts use regular index maps and store no
+    tables, so none are charged.
+    """
+    a = plan.bm * plan.bk * dtype_bytes
+    b = plan.bk * plan.bn * dtype_bytes
+    if plan.schedule == "k_inner":
+        c = plan.bm * plan.bn * acc_bytes
+    else:
+        c_width = acc_bytes if summary.s_max > 1 else dtype_bytes
+        c = 2 * plan.bm * plan.bn * c_width
+    if summary.kind == "block_diag":
+        tables = 0
+    else:
+        tables = 4 * summary.gm * (summary.s_max + 1)
+    return 2 * (a + b) + c + tables
+
+
+def cost_sparse_matmul(
+    summary: LayoutSummary,
+    n: int,
+    plan: BlockPlan,
+    chip: hw.ChipSpec = hw.TPU_V5E,
+    *,
+    dtype_bytes: int = 2,
+    acc_bytes: int = 4,
+) -> SparseMatmulCost:
+    """Evaluate a (schedule, bn) plan for ``sparse(A) @ B`` on `chip`.
+
+    `plan.bm` / `plan.bk` must equal the layout block shape — the kernel
+    tiles exactly on the structure's blocks.
+    """
+    if (plan.bm, plan.bk) != (summary.bm, summary.bk):
+        raise ValueError(
+            f"plan blocks ({plan.bm}, {plan.bk}) must match the layout "
+            f"block shape ({summary.bm}, {summary.bk})",
+        )
+    if plan.schedule not in SPARSE_SCHEDULES:
+        raise ValueError(
+            f"unknown sparse schedule {plan.schedule!r}; "
+            f"must be one of {SPARSE_SCHEDULES}",
+        )
+    gathered = summary.kind != "block_diag"
+    gm, gk, s_max = summary.gm, summary.gk, summary.s_max
+    gn = _ceil_div(n, plan.bn)
+    nnz = summary.nnz_blocks
+    valid_visits = nnz * gn
+
+    # ---- compute: MXU passes over padded blocks, only for valid visits;
+    # gather-indexed execution runs at a discounted effective peak.
+    pbm = _round_up(plan.bm, chip.mxu_sublanes)
+    pbk = _round_up(plan.bk, chip.mxu_lanes)
+    pbn = _round_up(plan.bn, chip.mxu_lanes)
+    padded_flops = 2 * valid_visits * pbm * pbk * pbn
+    row_fill = min(1.0, pbm / chip.mxu_lanes)
+    eff_peak = hw.peak_flops(chip, dtype_bytes) * max(
+        row_fill, 1.0 / chip.mxu_lanes * 8
+    )
+    if gathered:
+        eff_peak *= chip.sparse_gather_frac
+    compute_s = padded_flops / eff_peak
+    useful = 2 * summary.nnz_elems * n
+    mxu_utilization = useful / padded_flops if padded_flops else 0.0
+
+    # ---- memory: density-scaled A/B streams (gather-discounted), dense C.
+    dt = dtype_bytes
+    block_a = plan.bm * plan.bk
+    block_b = plan.bk * plan.bn
+    if plan.schedule == "a_resident":
+        a_bytes = nnz * block_a * dt
+    else:
+        a_bytes = nnz * block_a * gn * dt
+    b_bytes = valid_visits * block_b * dt
+    c_elems = summary.m * n
+    if plan.schedule == "k_inner" or s_max == 1:
+        c_bytes = c_elems * dt
+    else:
+        c_bytes = 2 * s_max * c_elems * acc_bytes + c_elems * dt
+    ab_bw = chip.hbm_bw * (chip.sparse_gather_frac if gathered else 1.0)
+    memory_s = (a_bytes + b_bytes) / ab_bw + c_bytes / chip.hbm_bw
+
+    # ---- grid overhead: every step schedules, valid or not — imbalance
+    # (s_max above the balanced ceil(nnz/gm)) is paid here.
+    steps = gm * gn * s_max
+    overhead_s = steps * chip.grid_step_overhead_s
+
+    return SparseMatmulCost(
+        layout=summary,
+        n=n,
+        plan=plan,
+        dtype_bytes=dtype_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        overhead_s=overhead_s,
+        hbm_bytes=a_bytes + b_bytes + c_bytes,
+        vmem_bytes=sparse_vmem_bytes(summary, plan, dtype_bytes, acc_bytes),
+        grid_steps=steps,
+        mxu_utilization=mxu_utilization,
+        gathered=gathered,
+    )

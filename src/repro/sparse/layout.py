@@ -1,0 +1,326 @@
+"""Block-sparse layouts: BSR-style structure for the lhs of a matmul.
+
+A `BlockSparseLayout` describes which (row-block, col-block) tiles of an
+(m, k) lhs are nonzero, at a fixed `block_shape` = (bm, bk).  Storage is
+*structure-only*: the operand itself stays dense (shape (m, k)); blocks
+absent from the layout are treated as exact zeros by every consumer (the
+kernels never read them, the oracle masks them), so the traffic and FLOP
+savings are real while density-1.0 parity with the dense kernels is exact
+by construction.
+
+The row structure is CSR-flavored but padded for a rectangular grid: row
+block i owns ``cols[i, :nnz[i]]`` (sorted, unique column-block indices);
+the tail of each row is padding the kernels skip via a validity test
+against `nnz`.  ``s_max`` (the padded row width) is the kernel's grid
+extent along the sparse dimension — a layout with one pathologically
+dense row pays for it in every row, the block-sparse analogue of the
+paper's skew-induced vertex imbalance.
+
+Constructors cover the three ways layouts arise in this repo: from an
+elementwise or block mask (`from_mask` / `from_block_mask`), from MoE
+capacity-packed dispatch (`block_diagonal` — the grouped expert-GEMM
+case), and from a target density for benchmarking (`random`).
+
+`LayoutSummary` is the hashable scalar view the cost model and planner
+consume (and cache on): grid extents, nonzero-block count, padded row
+width, and the block-diagonal/grouped marker.  Per-row distribution
+beyond (total, max) is deliberately not part of the cost surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.costmodel import _ceil_div
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSummary:
+    """Hashable cost-model view of a block-sparse layout.
+
+    `m`, `k` are the logical (unpadded) lhs dims; `gm`, `gk` the
+    block-grid extents at block shape (`bm`, `bk`); `nnz_blocks` the
+    nonzero-block count; `s_max` the padded per-row width (the kernel
+    grid extent along the sparse dimension).  `kind` is "bsr" for
+    gather-indexed layouts or "block_diag" for the grouped/MoE case
+    (regular index maps, no gather penalty); `groups` is the expert
+    count for "block_diag".
+    """
+
+    m: int
+    k: int
+    bm: int
+    bk: int
+    gm: int
+    gk: int
+    nnz_blocks: int
+    s_max: int
+    kind: str = "bsr"
+    groups: int = 1
+
+    def __post_init__(self):
+        if self.kind not in ("bsr", "block_diag"):
+            raise ValueError(f"unknown layout kind {self.kind!r}")
+        if min(self.m, self.k, self.bm, self.bk, self.gm, self.gk) <= 0:
+            raise ValueError(f"layout dims must be positive: {self}")
+        if not 0 <= self.nnz_blocks <= self.gm * self.gk:
+            raise ValueError(
+                f"nnz_blocks {self.nnz_blocks} outside [0, {self.gm * self.gk}]",
+            )
+        if not 1 <= self.s_max <= self.gk:
+            raise ValueError(f"s_max {self.s_max} outside [1, {self.gk}]")
+
+    @property
+    def density(self) -> float:
+        """Fraction of blocks present (1.0 = fully dense structure)."""
+        return self.nnz_blocks / (self.gm * self.gk)
+
+    @property
+    def nnz_elems(self) -> int:
+        """Upper bound on nonzero elements (edge blocks counted full)."""
+        return min(self.nnz_blocks * self.bm * self.bk, self.m * self.k)
+
+    @classmethod
+    def balanced(
+        cls,
+        m: int,
+        k: int,
+        block: tuple[int, int],
+        density: float,
+    ) -> "LayoutSummary":
+        """Idealized uniform layout at a target density (for modeling).
+
+        Rows share the nonzero blocks as evenly as possible:
+        ``s_max = ceil(nnz / gm)``.  This is the layout the crossover
+        search and the density-threshold benchmarks assume.
+        """
+        if not 0.0 < density <= 1.0:
+            raise ValueError(f"density must be in (0, 1], got {density}")
+        bm, bk = block
+        gm, gk = _ceil_div(m, bm), _ceil_div(k, bk)
+        nnz = min(gm * gk, max(1, round(density * gm * gk)))
+        return cls(
+            m=m,
+            k=k,
+            bm=bm,
+            bk=bk,
+            gm=gm,
+            gk=gk,
+            nnz_blocks=nnz,
+            s_max=min(gk, _ceil_div(nnz, gm)),
+        )
+
+    @classmethod
+    def block_diag(
+        cls,
+        groups: int,
+        m_per: int,
+        k_per: int,
+        block: tuple[int, int],
+    ) -> "LayoutSummary":
+        """The grouped / MoE case: `groups` independent (m_per, k_per)
+        lhs tiles on the diagonal of a conceptual (G*m_per, G*k_per) lhs.
+
+        Density is 1/groups; every row block holds exactly its group's
+        ``ceil(k_per / bk)`` column blocks, so the structure is perfectly
+        balanced and needs no gather (regular index maps)."""
+        bm, bk = block
+        gm_per, gk_per = _ceil_div(m_per, bm), _ceil_div(k_per, bk)
+        return cls(
+            m=groups * m_per,
+            k=groups * k_per,
+            bm=bm,
+            bk=bk,
+            gm=groups * gm_per,
+            gk=groups * gk_per,
+            nnz_blocks=groups * gm_per * gk_per,
+            s_max=gk_per,
+            kind="block_diag",
+            groups=groups,
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BlockSparseLayout:
+    """BSR-style block structure of an (m, k) lhs.
+
+    ``cols[i, :nnz[i]]`` are the sorted, unique column-block indices of
+    row block i; the tail of each padded row repeats 0 and is skipped by
+    the kernels via the `nnz` validity test.  Rows with no nonzero
+    blocks are legal (the corresponding output rows are epilogue(0)).
+    """
+
+    shape: tuple[int, int]
+    block_shape: tuple[int, int]
+    cols: np.ndarray
+    nnz: np.ndarray
+
+    def __post_init__(self):
+        m, k = self.shape
+        bm, bk = self.block_shape
+        if min(m, k, bm, bk) <= 0:
+            raise ValueError(
+                f"shape {self.shape} / block_shape {self.block_shape} "
+                f"must be positive",
+            )
+        cols = np.ascontiguousarray(np.asarray(self.cols, np.int32))
+        nnz = np.ascontiguousarray(np.asarray(self.nnz, np.int32))
+        gm, gk = _ceil_div(m, bm), _ceil_div(k, bk)
+        if cols.ndim != 2 or cols.shape[0] != gm:
+            raise ValueError(
+                f"cols must be (gm={gm}, s_max), got {cols.shape}",
+            )
+        if cols.shape[1] < 1 or cols.shape[1] > gk:
+            raise ValueError(
+                f"padded row width {cols.shape[1]} outside [1, gk={gk}]",
+            )
+        if nnz.shape != (gm,):
+            raise ValueError(f"nnz must be ({gm},), got {nnz.shape}")
+        if nnz.min(initial=0) < 0 or nnz.max(initial=0) > cols.shape[1]:
+            raise ValueError("nnz entries outside [0, s_max]")
+        for i in range(gm):
+            row = cols[i, : nnz[i]]
+            if row.size and (
+                row.min() < 0 or row.max() >= gk or np.any(np.diff(row) <= 0)
+            ):
+                raise ValueError(
+                    f"row {i}: column blocks must be sorted, unique and "
+                    f"within [0, {gk})",
+                )
+        object.__setattr__(self, "cols", cols)
+        object.__setattr__(self, "nnz", nnz)
+
+    # ------------------------------------------------------------- views
+    @property
+    def gm(self) -> int:
+        return _ceil_div(self.shape[0], self.block_shape[0])
+
+    @property
+    def gk(self) -> int:
+        return _ceil_div(self.shape[1], self.block_shape[1])
+
+    @property
+    def s_max(self) -> int:
+        return int(self.cols.shape[1])
+
+    @property
+    def nnz_total(self) -> int:
+        return int(self.nnz.sum())
+
+    @property
+    def density(self) -> float:
+        return self.nnz_total / (self.gm * self.gk)
+
+    def block_mask(self) -> np.ndarray:
+        """(gm, gk) bool: which blocks are present."""
+        mask = np.zeros((self.gm, self.gk), bool)
+        for i in range(self.gm):
+            mask[i, self.cols[i, : self.nnz[i]]] = True
+        return mask
+
+    def element_mask(self) -> np.ndarray:
+        """(m, k) bool: the elementwise footprint (oracle mask)."""
+        bm, bk = self.block_shape
+        full = np.kron(self.block_mask(), np.ones((bm, bk), bool))
+        return full[: self.shape[0], : self.shape[1]]
+
+    def device_arrays(self):
+        """(cols, nnz) as int32 jax arrays for the kernel's scalar
+        prefetch."""
+        import jax.numpy as jnp
+
+        return jnp.asarray(self.cols), jnp.asarray(self.nnz)
+
+    def summary(self) -> LayoutSummary:
+        return LayoutSummary(
+            m=self.shape[0],
+            k=self.shape[1],
+            bm=self.block_shape[0],
+            bk=self.block_shape[1],
+            gm=self.gm,
+            gk=self.gk,
+            nnz_blocks=self.nnz_total,
+            s_max=self.s_max,
+        )
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def from_block_mask(
+        cls,
+        mask,
+        block_shape: tuple[int, int],
+        shape: tuple[int, int] | None = None,
+    ) -> "BlockSparseLayout":
+        """Layout from a (gm, gk) boolean block mask.
+
+        `shape` defaults to the exact block multiple; pass the logical
+        (m, k) when the last row/column blocks are partial.
+        """
+        mask = np.asarray(mask, bool)
+        if mask.ndim != 2:
+            raise ValueError(f"block mask must be 2-D, got {mask.shape}")
+        gm, gk = mask.shape
+        bm, bk = block_shape
+        if shape is None:
+            shape = (gm * bm, gk * bk)
+        nnz = mask.sum(axis=1).astype(np.int32)
+        s_max = max(1, int(nnz.max(initial=0)))
+        cols = np.zeros((gm, s_max), np.int32)
+        for i in range(gm):
+            idx = np.nonzero(mask[i])[0]
+            cols[i, : idx.size] = idx
+        return cls(
+            shape=tuple(shape),
+            block_shape=tuple(block_shape),
+            cols=cols,
+            nnz=nnz,
+        )
+
+    @classmethod
+    def from_mask(cls, mask, block_shape: tuple[int, int]) -> "BlockSparseLayout":
+        """Layout from an elementwise (m, k) mask: a block is present iff
+        any element in it is True (structure is promoted to block
+        granularity, never dropped)."""
+        mask = np.asarray(mask, bool)
+        if mask.ndim != 2:
+            raise ValueError(f"mask must be 2-D, got {mask.shape}")
+        m, k = mask.shape
+        bm, bk = block_shape
+        gm, gk = _ceil_div(m, bm), _ceil_div(k, bk)
+        padded = np.zeros((gm * bm, gk * bk), bool)
+        padded[:m, :k] = mask
+        blocks = padded.reshape(gm, bm, gk, bk).any(axis=(1, 3))
+        return cls.from_block_mask(blocks, block_shape, shape=(m, k))
+
+    @classmethod
+    def dense(cls, m: int, k: int, block_shape: tuple[int, int]) -> "BlockSparseLayout":
+        """The fully-dense structure (density 1.0) — the parity anchor."""
+        bm, bk = block_shape
+        gm, gk = _ceil_div(m, bm), _ceil_div(k, bk)
+        return cls.from_block_mask(np.ones((gm, gk), bool), block_shape, shape=(m, k))
+
+    @classmethod
+    def random(
+        cls,
+        m: int,
+        k: int,
+        block_shape: tuple[int, int],
+        density: float,
+        seed: int = 0,
+    ) -> "BlockSparseLayout":
+        """Uniform random structure with an exact nonzero-block count
+        (``round(density * gm * gk)``, min 1) — the benchmarking
+        generator."""
+        if not 0.0 < density <= 1.0:
+            raise ValueError(f"density must be in (0, 1], got {density}")
+        bm, bk = block_shape
+        gm, gk = _ceil_div(m, bm), _ceil_div(k, bk)
+        n_cells = gm * gk
+        n_pick = min(n_cells, max(1, round(density * n_cells)))
+        rng = np.random.default_rng(seed)
+        flat = rng.choice(n_cells, size=n_pick, replace=False)
+        mask = np.zeros(n_cells, bool)
+        mask[flat] = True
+        return cls.from_block_mask(mask.reshape(gm, gk), block_shape, shape=(m, k))

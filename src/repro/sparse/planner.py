@@ -1,0 +1,234 @@
+"""Sparsity-aware planner: (schedule x bn) search under the AMP budget.
+
+The dense planner's mechanism extended to block-sparse layouts.  The
+layout fixes the lhs tiling (kernel blocks == structure blocks), so the
+search space is (schedule, bn); candidates must fit ``amp * vmem_bytes``
+including the scalar index tables, and the argmin under the sparse cost
+model wins.  `plan_grouped_matmul` covers the block-diagonal / MoE case,
+where the per-group block shape is searchable too (the structure is
+implied, not stored).
+
+`crossover_density` is the subsystem's headline number: the modeled
+break-even density d* below which the best sparse plan beats the best
+dense plan on a chip — the PopSparse density threshold, exposed through
+the same `mm_config` resolution as everything else::
+
+    with mm_config(chip="ipu_gc200"):
+        dstar = crossover_density(4096, 4096, 4096)
+
+All knobs left as None resolve through the `mm_config` context stack;
+plans are cached per (summary, n, chip, amp, mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core import config, hw
+from repro.core.costmodel import BlockPlan, _ceil_div
+from repro.core.planner import _aligned_candidates, plan_matmul
+from repro.sparse.costmodel import (
+    PLANNED_SPARSE_SCHEDULES,
+    SparseMatmulCost,
+    cost_sparse_matmul,
+    sparse_vmem_bytes,
+)
+from repro.sparse.layout import LayoutSummary
+
+
+def _better(c: SparseMatmulCost, best: SparseMatmulCost | None) -> bool:
+    """Planner argmin order: total time, grid steps as the tie-break."""
+    if best is None or c.total_s < best.total_s:
+        return True
+    return c.total_s == best.total_s and c.grid_steps < best.grid_steps
+
+
+def plan_sparse_matmul(
+    layout,
+    n: int,
+    *,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    mode: str | None = None,
+) -> SparseMatmulCost:
+    """Choose a (schedule, bn) plan for ``sparse(A[m, k]) @ B[k, n]``.
+
+    `layout` is a `BlockSparseLayout` or its `LayoutSummary`.  amp /
+    chip / mode resolve through the active `mm_config` stack; mode
+    "k_inner" / "naive" restrict the search as in the dense planner (the
+    naive baseline fixes square-ish 512 blocks on the rhs).
+    """
+    summary = layout.summary() if hasattr(layout, "summary") else layout
+    if not isinstance(summary, LayoutSummary):
+        raise TypeError(
+            f"layout must be a BlockSparseLayout or LayoutSummary, "
+            f"got {type(layout).__name__}",
+        )
+    cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
+    return _plan_sparse_cached(
+        summary,
+        n,
+        dtype_bytes=dtype_bytes,
+        amp=cfg.amp,
+        chip=cfg.chip_spec,
+        mode=cfg.plan_mode,
+    )
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_sparse_cached(
+    summary: LayoutSummary,
+    n: int,
+    *,
+    dtype_bytes: int,
+    amp: float,
+    chip: hw.ChipSpec,
+    mode: str,
+) -> SparseMatmulCost:
+    budget = int(amp * chip.vmem_bytes)
+    lane = chip.mxu_lanes
+    if mode == "naive":
+        bn_cands = [min(512, _ceil_div(n, lane) * lane)]
+        schedules = ("k_inner",)
+    else:
+        bn_cands = _aligned_candidates(n, lane, 4096)
+        schedules = ("k_inner",) if mode == "k_inner" else PLANNED_SPARSE_SCHEDULES
+    best: SparseMatmulCost | None = None
+    for schedule in schedules:
+        for bn in bn_cands:
+            p = BlockPlan(summary.bm, summary.bk, bn, schedule=schedule)
+            if sparse_vmem_bytes(summary, p, dtype_bytes) > budget:
+                continue
+            c = cost_sparse_matmul(summary, n, p, chip, dtype_bytes=dtype_bytes)
+            if _better(c, best):
+                best = c
+    if best is None:
+        # Budget too small for any aligned rhs block: fail over to the
+        # minimum-granule plan (mirrors the dense planner / Poplar).
+        p = BlockPlan(summary.bm, summary.bk, lane)
+        best = cost_sparse_matmul(summary, n, p, chip, dtype_bytes=dtype_bytes)
+    return best
+
+
+def plan_grouped_matmul(
+    groups: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    mode: str | None = None,
+) -> SparseMatmulCost:
+    """Plan `groups` independent A[m, k] @ B[k, n] expert GEMMs.
+
+    The grouped kernel is K-inner with the group index as a leading
+    parallel grid dim; the search covers the per-group (bm, bk, bn).
+    Modeled as a block-diagonal layout at density 1/groups with regular
+    (gather-free) index maps.
+    """
+    cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
+    return _plan_grouped_cached(
+        groups,
+        m,
+        k,
+        n,
+        dtype_bytes=dtype_bytes,
+        amp=cfg.amp,
+        chip=cfg.chip_spec,
+        mode=cfg.plan_mode,
+    )
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_grouped_cached(
+    groups: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    dtype_bytes: int,
+    amp: float,
+    chip: hw.ChipSpec,
+    mode: str,
+) -> SparseMatmulCost:
+    budget = int(amp * chip.vmem_bytes)
+    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+    if mode == "naive":
+        bm_cands = [min(512, _ceil_div(m, sub) * sub)]
+        bk_cands = [min(512, _ceil_div(k, lane) * lane)]
+        bn_cands = [min(512, _ceil_div(n, lane) * lane)]
+    else:
+        bm_cands = _aligned_candidates(m, sub if m < lane else lane, 4096)
+        bk_cands = _aligned_candidates(k, lane, 4096)
+        bn_cands = _aligned_candidates(n, lane, 4096)
+    best: SparseMatmulCost | None = None
+    for bm in bm_cands:
+        for bk in bk_cands:
+            summary = LayoutSummary.block_diag(groups, m, k, (bm, bk))
+            for bn in bn_cands:
+                p = BlockPlan(bm, bk, bn, schedule="k_inner")
+                if sparse_vmem_bytes(summary, p, dtype_bytes) > budget:
+                    continue
+                c = cost_sparse_matmul(summary, n, p, chip, dtype_bytes=dtype_bytes)
+                if _better(c, best):
+                    best = c
+    if best is None:
+        summary = LayoutSummary.block_diag(groups, m, k, (sub, lane))
+        best = cost_sparse_matmul(
+            summary,
+            n,
+            BlockPlan(sub, lane, lane),
+            chip,
+            dtype_bytes=dtype_bytes,
+        )
+    return best
+
+
+def crossover_density(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    block: tuple[int, int] = (128, 128),
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+) -> float:
+    """Modeled sparse-vs-dense break-even density d* for one shape.
+
+    Returns the largest density at which the best balanced block-sparse
+    plan is strictly faster than the best dense plan: densities below d*
+    favor sparse.  0.0 means sparse never wins on this shape/chip; 1.0
+    means it always does (it cannot on any registered chip, since
+    gathered execution pays `sparse_gather_frac` at equal work).
+    Deterministic cost-model arithmetic — CI gates it per chip.
+
+    Both sides of the comparison use the full "skew_aware" search
+    regardless of the ambient plan_mode, so d* measures the structures,
+    not a handicapped planner.
+    """
+    cfg = config.resolve(amp=amp, chip=chip)
+    kw = dict(dtype_bytes=dtype_bytes, amp=cfg.amp, chip=cfg.chip_spec)
+
+    dense_t = plan_matmul(m, k, n, mode="skew_aware", **kw).total_s
+
+    def sparse_t(d: float) -> float:
+        summary = LayoutSummary.balanced(m, k, block, d)
+        return plan_sparse_matmul(summary, n, mode="skew_aware", **kw).total_s
+
+    if sparse_t(1.0) < dense_t:
+        return 1.0
+    lo_d = 1.0 / (_ceil_div(m, block[0]) * _ceil_div(k, block[1]))
+    if sparse_t(lo_d) >= dense_t:
+        return 0.0
+    lo, hi = lo_d, 1.0
+    for _ in range(50):
+        mid = 0.5 * (lo + hi)
+        if sparse_t(mid) < dense_t:
+            lo = mid
+        else:
+            hi = mid
+    return lo

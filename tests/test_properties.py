@@ -8,10 +8,12 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import hw
+from repro.core.costmodel import BlockPlan
 from repro.core.planner import plan_matmul
 from repro.kernels import ops, ref
 from repro.models import layers
 from repro.optim import compression
+from repro.sparse import BlockSparseLayout
 
 SET = settings(max_examples=25, deadline=None)
 
@@ -43,6 +45,49 @@ def test_skew_matmul_property(m, k, n, seed):
     got = ops.skew_matmul(a, b)
     np.testing.assert_allclose(got, ref.matmul_ref(a, b),
                                rtol=5e-3, atol=5e-4)
+
+
+@SET
+@given(m=st.integers(1, 160), k=st.integers(1, 300), n=st.integers(1, 200),
+       schedule=st.sampled_from(["k_inner", "a_resident", "b_resident"]),
+       epilogue=st.sampled_from([None, "bias", "silu_residual"]),
+       seed=st.integers(0, 2 ** 16))
+def test_block_sparse_density_one_bitwise_dense_parity(m, k, n, schedule,
+                                                       epilogue, seed):
+    """A fully-dense block structure must reproduce the dense kernel
+    BIT-FOR-BIT across schedules, epilogues and non-multiple-of-block
+    shapes (same blocks, same accumulation order, same flush)."""
+    rng = np.random.default_rng(seed)
+    bm = min(32, -(-m // 8) * 8)
+    bk = min(128, -(-k // 128) * 128)
+    bn = min(128, -(-n // 128) * 128)
+    a = jnp.asarray(rng.normal(size=(m, k)) * 0.4, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)) * 0.4, jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    res = jnp.asarray(rng.normal(size=(m, n)), jnp.float32)
+    layout = BlockSparseLayout.dense(m, k, (bm, bk))
+    plan = BlockPlan(bm, bk, bn, schedule=schedule)
+    got = ops.sparse_matmul(a, b, layout, plan=plan, epilogue=epilogue,
+                            bias=bias, residual=res)
+    want = ops.skew_matmul(a, b, plan=plan, epilogue=epilogue, bias=bias,
+                           residual=res)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@SET
+@given(m=st.integers(1, 160), k=st.integers(1, 300), n=st.integers(1, 160),
+       density=st.floats(min_value=0.05, max_value=1.0),
+       seed=st.integers(0, 2 ** 16))
+def test_block_sparse_matmul_property(m, k, n, density, seed):
+    """Planned block-sparse matmul matches the masked dense oracle at any
+    structure density (zero blocks are exact zeros, never read)."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)) * 0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)) * 0.5, jnp.float32)
+    layout = BlockSparseLayout.random(m, k, (32, 128), density, seed=seed)
+    got = ops.sparse_matmul(a, b, layout)
+    want = ref.block_sparse_matmul_ref(a, b, layout)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
 
 
 @SET
