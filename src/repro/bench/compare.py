@@ -39,7 +39,10 @@ _EXACT_NAMES = frozenset(
         "repeats",
     },
 )
-_FRACTION_SUFFIXES = ("frac", "fraction", "util", "spread", "min", "max")
+# "speedup" metrics are modeled time ratios (sparse-vs-dense, the tuned
+# suite's synthetic-host selection) — deterministic arithmetic, gated
+# with the same absolute band as fractions.
+_FRACTION_SUFFIXES = ("frac", "fraction", "util", "spread", "min", "max", "speedup")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -62,15 +62,15 @@ def _aligned_candidates(dim: int, granule: int, cap: int) -> list[int]:
     return sorted(out)
 
 
-def _search(d: MatmulDims, chip: hw.ChipSpec, budget: int,
-            schedules: tuple[str, ...],
-            batch_grid: bool = False) -> MatmulCost | None:
+def _feasible_costs(d: MatmulDims, chip: hw.ChipSpec, budget: int,
+                    schedules: tuple[str, ...],
+                    batch_grid: bool = False) -> Iterable[MatmulCost]:
+    """Every (schedule x aligned blocks) plan that fits the AMP budget."""
     sub, lane = chip.mxu_sublanes, chip.mxu_lanes
     m_eff = d.m if batch_grid else d.m * d.batch
     bm_cands = _aligned_candidates(m_eff, sub if m_eff < lane else lane, 4096)
     bk_cands = _aligned_candidates(d.k, lane, 4096)
     bn_cands = _aligned_candidates(d.n, lane, 4096)
-    best: MatmulCost | None = None
     for schedule in schedules:
         for bm in bm_cands:
             for bk in bk_cands:
@@ -79,12 +79,59 @@ def _search(d: MatmulDims, chip: hw.ChipSpec, budget: int,
                                   batch_grid=batch_grid)
                     if p.vmem_bytes(d) > budget:
                         continue
-                    c = cost_matmul(d, p, chip)
-                    if best is None or c.total_s < best.total_s or (
-                            c.total_s == best.total_s
-                            and c.grid_steps < best.grid_steps):
-                        best = c
+                    yield cost_matmul(d, p, chip)
+
+
+def _search(d: MatmulDims, chip: hw.ChipSpec, budget: int,
+            schedules: tuple[str, ...],
+            batch_grid: bool = False) -> MatmulCost | None:
+    best: MatmulCost | None = None
+    for c in _feasible_costs(d, chip, budget, schedules, batch_grid):
+        if best is None or c.total_s < best.total_s or (
+                c.total_s == best.total_s
+                and c.grid_steps < best.grid_steps):
+            best = c
     return best
+
+
+def _plan_order(c: MatmulCost) -> tuple:
+    """Deterministic candidate ranking: modeled time, then grid steps,
+    then the `_search` encounter order (schedule-family position, blocks
+    ascending, folded before batch-grid) so ``enumerate_plans(...)[0]``
+    is exactly the `_search` argmin even on exact cost ties."""
+    p = c.plan
+    return (c.total_s, c.grid_steps, p.batch_grid,
+            SCHEDULES.index(p.schedule), p.bm, p.bk, p.bn)
+
+
+def enumerate_plans(m: int, k: int, n: int, *, dtype_bytes: int = 2,
+                    amp: float | None = None,
+                    chip: hw.ChipSpec | str | None = None,
+                    batch: int = 1, top: int = 8) -> list[MatmulCost]:
+    """The modeled top-`top` candidate plans, best first — the measured
+    autotuner's candidate set (repro.tune).
+
+    Covers the full skew-aware search space (schedule family + batch-grid
+    variant when batch > 1); the first element is exactly the plan
+    ``plan_matmul(mode="skew_aware")`` returns.  Falls back to the
+    minimum-granule plan when no aligned candidate fits the budget, so
+    the list is never empty.
+    """
+    cfg = config.resolve(amp=amp, chip=chip)
+    chip = cfg.chip_spec
+    d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
+    budget = int(cfg.amp * chip.vmem_bytes)
+    costs = list(_feasible_costs(d, chip, budget, SCHEDULES))
+    if batch > 1:
+        costs.extend(
+            _feasible_costs(d, chip, budget, ("k_inner",), batch_grid=True))
+    if not costs:
+        costs = [cost_matmul(d, BlockPlan(chip.mxu_sublanes, chip.mxu_lanes,
+                                          chip.mxu_lanes), chip)]
+    # Candidate identities are unique by construction (each (schedule,
+    # blocks, batch_grid) combination is generated exactly once).
+    costs.sort(key=_plan_order)
+    return costs[:top]
 
 
 def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
@@ -106,11 +153,41 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
                      benchmarks can report the schedule-diversity gap.
       "naive"      — fixed 512^3-ish square blocks clipped to the problem,
                      the baseline whose skew collapse we reproduce.
+      "tuned"      — consult the measured autotuner cache (repro.tune) for
+                     this shape class; a hit returns the *measured* winner
+                     (costed on the actual dims), a miss — or a cached plan
+                     that no longer fits the budget — falls back to the
+                     modeled "skew_aware" plan.
     """
     cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
+    if cfg.plan_mode == "tuned":
+        # Tuned plans depend on the *active tune cache* (mutable state),
+        # so they are resolved outside the lru cache — only the modeled
+        # fallback below is memoized.
+        return _plan_matmul_tuned(m, k, n, dtype_bytes=dtype_bytes,
+                                  amp=cfg.amp, chip=cfg.chip_spec,
+                                  batch=batch)
     return _plan_matmul_cached(m, k, n, dtype_bytes=dtype_bytes,
                                amp=cfg.amp, chip=cfg.chip_spec,
                                mode=cfg.plan_mode, batch=batch)
+
+
+def _plan_matmul_tuned(m: int, k: int, n: int, *, dtype_bytes: int,
+                       amp: float, chip: hw.ChipSpec,
+                       batch: int) -> MatmulCost:
+    from repro.tune import runtime as tune_runtime  # planner <- tune cycle
+
+    plan = tune_runtime.lookup_dense(m, k, n, batch=batch,
+                                     dtype_bytes=dtype_bytes, amp=amp,
+                                     chip=chip)
+    if plan is not None:
+        d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
+        # The winner was measured on the bucket representative; the actual
+        # dims can be up to 2x larger per axis, so re-check the budget.
+        if plan.vmem_bytes(d) <= int(amp * chip.vmem_bytes):
+            return cost_matmul(d, plan, chip)
+    return _plan_matmul_cached(m, k, n, dtype_bytes=dtype_bytes, amp=amp,
+                               chip=chip, mode="skew_aware", batch=batch)
 
 
 @functools.lru_cache(maxsize=4096)
@@ -129,10 +206,13 @@ def _plan_matmul_cached(m: int, k: int, n: int, *, dtype_bytes: int,
     best = _search(d, chip, budget, schedules)
     if batch > 1:
         # The batched-grid kernel is K-inner only (batch rides a leading
-        # parallel grid dim); residency schedules always fold.
+        # parallel grid dim); residency schedules always fold.  The merge
+        # uses `_plan_order` so exact-cost ties resolve identically to
+        # `enumerate_plans` (grid steps break the tie, folded plans win
+        # a full tie).
         batched = _search(d, chip, budget, ("k_inner",), batch_grid=True)
         if batched is not None and (
-                best is None or batched.total_s < best.total_s):
+                best is None or _plan_order(batched) < _plan_order(best)):
             best = batched
     if best is None:
         # Budget too small for any aligned plan (tiny AMP): fall back to the

@@ -57,7 +57,10 @@ def plan_sparse_matmul(
     `layout` is a `BlockSparseLayout` or its `LayoutSummary`.  amp /
     chip / mode resolve through the active `mm_config` stack; mode
     "k_inner" / "naive" restrict the search as in the dense planner (the
-    naive baseline fixes square-ish 512 blocks on the rhs).
+    naive baseline fixes square-ish 512 blocks on the rhs); "tuned"
+    consults the measured autotuner cache (repro.tune) keyed on the
+    exact `LayoutSummary`, falling back to the modeled "skew_aware"
+    search on a miss.
     """
     summary = layout.summary() if hasattr(layout, "summary") else layout
     if not isinstance(summary, LayoutSummary):
@@ -66,6 +69,18 @@ def plan_sparse_matmul(
             f"got {type(layout).__name__}",
         )
     cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
+    if cfg.plan_mode == "tuned":
+        # Tuned plans depend on the active tune cache (mutable state):
+        # resolved outside the lru cache, unlike the modeled modes, so a
+        # cache swap inside a `with mm_config(...)` block is never served
+        # a stale plan.
+        return _plan_sparse_tuned(
+            summary,
+            n,
+            dtype_bytes=dtype_bytes,
+            amp=cfg.amp,
+            chip=cfg.chip_spec,
+        )
     return _plan_sparse_cached(
         summary,
         n,
@@ -73,6 +88,36 @@ def plan_sparse_matmul(
         amp=cfg.amp,
         chip=cfg.chip_spec,
         mode=cfg.plan_mode,
+    )
+
+
+def _plan_sparse_tuned(
+    summary: LayoutSummary,
+    n: int,
+    *,
+    dtype_bytes: int,
+    amp: float,
+    chip: hw.ChipSpec,
+) -> SparseMatmulCost:
+    from repro.tune import runtime as tune_runtime  # planner <- tune cycle
+
+    plan = tune_runtime.lookup_sparse(
+        summary, n, dtype_bytes=dtype_bytes, amp=amp, chip=chip
+    )
+    if (
+        plan is not None
+        and (plan.bm, plan.bk) == (summary.bm, summary.bk)
+        and sparse_vmem_bytes(summary, plan, dtype_bytes)
+        <= int(amp * chip.vmem_bytes)
+    ):
+        return cost_sparse_matmul(summary, n, plan, chip, dtype_bytes=dtype_bytes)
+    return _plan_sparse_cached(
+        summary,
+        n,
+        dtype_bytes=dtype_bytes,
+        amp=amp,
+        chip=chip,
+        mode="skew_aware",
     )
 
 
@@ -111,6 +156,54 @@ def _plan_sparse_cached(
     return best
 
 
+def enumerate_sparse_plans(
+    layout,
+    n: int,
+    *,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    top: int = 8,
+) -> list[SparseMatmulCost]:
+    """The modeled top-`top` (schedule, bn) candidates, best first — the
+    measured autotuner's sparse candidate set (repro.tune).
+
+    The first element is exactly the ``plan_sparse_matmul(mode=
+    "skew_aware")`` argmin (identical tie-breaks); the minimum-granule
+    fail-over plan makes the list non-empty at any budget.
+    """
+    summary = layout.summary() if hasattr(layout, "summary") else layout
+    cfg = config.resolve(amp=amp, chip=chip)
+    chip = cfg.chip_spec
+    budget = int(cfg.amp * chip.vmem_bytes)
+    lane = chip.mxu_lanes
+    costs: list[SparseMatmulCost] = []
+    for schedule in PLANNED_SPARSE_SCHEDULES:
+        for bn in _aligned_candidates(n, lane, 4096):
+            p = BlockPlan(summary.bm, summary.bk, bn, schedule=schedule)
+            if sparse_vmem_bytes(summary, p, dtype_bytes) > budget:
+                continue
+            costs.append(
+                cost_sparse_matmul(summary, n, p, chip, dtype_bytes=dtype_bytes)
+            )
+    if not costs:
+        p = BlockPlan(summary.bm, summary.bk, lane)
+        costs = [cost_sparse_matmul(summary, n, p, chip, dtype_bytes=dtype_bytes)]
+    costs.sort(key=_sparse_plan_order)
+    return costs[:top]
+
+
+def _sparse_plan_order(c: SparseMatmulCost) -> tuple:
+    """Deterministic candidate ranking matching `_better`'s encounter
+    order (schedule position in the planned family, then bn ascending)."""
+    return (
+        c.total_s,
+        c.grid_steps,
+        PLANNED_SPARSE_SCHEDULES.index(c.plan.schedule),
+        c.plan.bn,
+    )
+
+
 def plan_grouped_matmul(
     groups: int,
     m: int,
@@ -130,6 +223,18 @@ def plan_grouped_matmul(
     (gather-free) index maps.
     """
     cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
+    if cfg.plan_mode == "tuned":
+        # Same contract as the other planners: tuned plans read the
+        # mutable active cache, so they bypass the lru cache.
+        return _plan_grouped_tuned(
+            groups,
+            m,
+            k,
+            n,
+            dtype_bytes=dtype_bytes,
+            amp=cfg.amp,
+            chip=cfg.chip_spec,
+        )
     return _plan_grouped_cached(
         groups,
         m,
@@ -139,6 +244,38 @@ def plan_grouped_matmul(
         amp=cfg.amp,
         chip=cfg.chip_spec,
         mode=cfg.plan_mode,
+    )
+
+
+def _plan_grouped_tuned(
+    groups: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    dtype_bytes: int,
+    amp: float,
+    chip: hw.ChipSpec,
+) -> SparseMatmulCost:
+    from repro.tune import runtime as tune_runtime  # planner <- tune cycle
+
+    plan = tune_runtime.lookup_grouped(
+        groups, m, k, n, dtype_bytes=dtype_bytes, amp=amp, chip=chip
+    )
+    if plan is not None:
+        summary = LayoutSummary.block_diag(groups, m, k, (plan.bm, plan.bk))
+        budget = int(amp * chip.vmem_bytes)
+        if sparse_vmem_bytes(summary, plan, dtype_bytes) <= budget:
+            return cost_sparse_matmul(summary, n, plan, chip, dtype_bytes=dtype_bytes)
+    return _plan_grouped_cached(
+        groups,
+        m,
+        k,
+        n,
+        dtype_bytes=dtype_bytes,
+        amp=amp,
+        chip=chip,
+        mode="skew_aware",
     )
 
 
@@ -185,6 +322,50 @@ def _plan_grouped_cached(
             dtype_bytes=dtype_bytes,
         )
     return best
+
+
+def enumerate_grouped_plans(
+    groups: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    top: int = 8,
+) -> list[SparseMatmulCost]:
+    """The modeled top-`top` per-group (bm, bk, bn) candidates, best
+    first — the measured autotuner's grouped candidate set."""
+    cfg = config.resolve(amp=amp, chip=chip)
+    chip = cfg.chip_spec
+    budget = int(cfg.amp * chip.vmem_bytes)
+    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+    costs: list[SparseMatmulCost] = []
+    for bm in _aligned_candidates(m, sub if m < lane else lane, 4096):
+        for bk in _aligned_candidates(k, lane, 4096):
+            summary = LayoutSummary.block_diag(groups, m, k, (bm, bk))
+            for bn in _aligned_candidates(n, lane, 4096):
+                p = BlockPlan(bm, bk, bn, schedule="k_inner")
+                if sparse_vmem_bytes(summary, p, dtype_bytes) > budget:
+                    continue
+                costs.append(
+                    cost_sparse_matmul(summary, n, p, chip, dtype_bytes=dtype_bytes)
+                )
+    if not costs:
+        summary = LayoutSummary.block_diag(groups, m, k, (sub, lane))
+        fallback = BlockPlan(sub, lane, lane)
+        costs = [
+            cost_sparse_matmul(summary, n, fallback, chip, dtype_bytes=dtype_bytes)
+        ]
+    costs.sort(key=_grouped_plan_order)
+    return costs[:top]
+
+
+def _grouped_plan_order(c: SparseMatmulCost) -> tuple:
+    """Deterministic candidate ranking matching `_better`'s encounter
+    order (blocks ascending, bm outermost)."""
+    return (c.total_s, c.grid_steps, c.plan.bm, c.plan.bk, c.plan.bn)
 
 
 def crossover_density(

@@ -1,0 +1,85 @@
+"""repro.tune — measured autotuning on top of the modeled planners.
+
+The paper's skew story is ultimately an empirical claim: which
+(schedule, blocks) plan wins depends on the real chip, and the cost
+model's constants are educated guesses.  This subsystem closes the loop:
+
+* `repro.tune.shapeclass` — the problem-space partition (power-of-two
+  bucketing); one measured representative answers a whole shape class.
+* `repro.tune.tuner`     — times the modeled top-K candidates for dense
+  / block-sparse / grouped matmuls through an injectable `Measurer`
+  (wall-clock on a live host, or the deterministic modeled measurer for
+  tests and CI).
+* `repro.tune.cache`     — the versioned JSON cache of winners
+  (`TuneCache` / `TuneEntry`), keyed by chip, dtype, AMP and shape class
+  (exact `LayoutSummary` for sparse), with full provenance.
+* `repro.tune.runtime`   — the active-cache state ``plan_mode="tuned"``
+  reads: `use_cache` / `set_active_cache`, default on-disk location,
+  planner-facing lookups.
+* `repro.tune.calibrate` — regresses measured-vs-modeled ratios into
+  per-chip correction factors (including a fitted
+  `ChipSpec.sparse_gather_frac`) that `hw.register_chip` can absorb.
+
+Entry points: ``with mm_config(plan_mode="tuned"): ...`` makes every
+planned matmul consult the cache (modeled fallback on miss), and
+``python -m repro.launch.tune`` fills it.
+"""
+
+from repro.tune.cache import (
+    TUNE_SCHEMA_VERSION,
+    TuneCache,
+    TuneEntry,
+    dense_key,
+    grouped_key,
+    sparse_key,
+)
+from repro.tune.calibrate import (
+    Corrections,
+    apply_corrections,
+    correction_factor,
+    fit_corrections,
+    fit_gather_frac,
+    unit_clamp,
+)
+from repro.tune.runtime import (
+    default_cache_path,
+    get_active_cache,
+    set_active_cache,
+    use_cache,
+)
+from repro.tune.shapeclass import ShapeClass, bucket_dim
+from repro.tune.tuner import (
+    modeled_measurer,
+    remodel,
+    tune_dense,
+    tune_grouped,
+    tune_sparse,
+    wallclock_measurer,
+)
+
+__all__ = [
+    "TUNE_SCHEMA_VERSION",
+    "TuneCache",
+    "TuneEntry",
+    "dense_key",
+    "grouped_key",
+    "sparse_key",
+    "Corrections",
+    "apply_corrections",
+    "correction_factor",
+    "fit_corrections",
+    "fit_gather_frac",
+    "unit_clamp",
+    "default_cache_path",
+    "get_active_cache",
+    "set_active_cache",
+    "use_cache",
+    "ShapeClass",
+    "bucket_dim",
+    "modeled_measurer",
+    "remodel",
+    "tune_dense",
+    "tune_grouped",
+    "tune_sparse",
+    "wallclock_measurer",
+]

@@ -1,0 +1,164 @@
+"""The live side of the autotuner: which cache ``plan_mode="tuned"`` reads.
+
+The planners must not pay file IO per plan, and — unlike the modeled
+modes — a tuned plan depends on *mutable* state (the active cache), so
+tuned lookups deliberately bypass the planners' lru caches.  This module
+owns that state:
+
+* `use_cache(cache)` / `set_active_cache(cache)` — install a `TuneCache`
+  (or a path to one) for the process; `use_cache` is the scoped form
+  tests and suites use.
+* With nothing installed, the default on-disk cache is loaded lazily,
+  once: ``$REPRO_TUNE_CACHE`` if set, else ``benchmarks/tuned/
+  tune_cache.json`` at the repo root.  A missing — or stale /
+  schema-rejected — default file is an empty cache (every lookup
+  misses -> modeled fallback, with a warning for the rejected case),
+  never an error; explicitly installed caches still fail loudly.
+* `lookup_dense` / `lookup_sparse` / `lookup_grouped` — the planner-facing
+  queries: build the cache key for a problem (bucketing dense shapes via
+  `ShapeClass`), return the cached winner `BlockPlan` or None.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+import warnings
+from typing import Iterator
+
+from repro.bench.record import SchemaError
+from repro.core import hw
+from repro.core.costmodel import BlockPlan
+from repro.sparse.layout import LayoutSummary
+from repro.tune.cache import (
+    TuneCache,
+    dense_key,
+    grouped_key,
+    sparse_key,
+)
+from repro.tune.shapeclass import ShapeClass
+
+ENV_CACHE = "REPRO_TUNE_CACHE"
+
+_REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+
+
+def default_cache_path() -> str:
+    """``$REPRO_TUNE_CACHE`` or the conventional repo-root location."""
+    return os.environ.get(ENV_CACHE) or os.path.join(
+        _REPO_ROOT, "benchmarks", "tuned", "tune_cache.json"
+    )
+
+
+_LOCK = threading.Lock()
+_ACTIVE: TuneCache | None = None
+_DEFAULT: TuneCache | None = None
+_DEFAULT_LOADED = False
+
+
+def set_active_cache(cache: TuneCache | str | None) -> None:
+    """Install the process-wide tuned-plan cache (a path loads it).
+
+    None reverts to the lazily-loaded default cache.
+    """
+    global _ACTIVE
+    if isinstance(cache, str):
+        cache = TuneCache.load(cache)
+    with _LOCK:
+        _ACTIVE = cache
+
+
+def get_active_cache() -> TuneCache:
+    """The cache tuned lookups consult right now (may be empty)."""
+    global _DEFAULT, _DEFAULT_LOADED
+    with _LOCK:
+        if _ACTIVE is not None:
+            return _ACTIVE
+        if not _DEFAULT_LOADED:
+            path = default_cache_path()
+            if os.path.exists(path):
+                try:
+                    _DEFAULT = TuneCache.load(path)
+                except SchemaError as e:
+                    # The *ambient* default degrades gracefully: a stale
+                    # or truncated on-disk cache must not crash every
+                    # tuned plan — it just stops answering.  Explicit
+                    # loads (set_active_cache / TuneCache.load) stay loud.
+                    warnings.warn(
+                        f"ignoring unusable tune cache: {e}", stacklevel=2
+                    )
+                    _DEFAULT = TuneCache()
+            else:
+                _DEFAULT = TuneCache()
+            _DEFAULT_LOADED = True
+        return _DEFAULT
+
+
+def reset_default_cache() -> None:
+    """Forget the lazily-loaded default (re-reads disk on next lookup)."""
+    global _DEFAULT, _DEFAULT_LOADED
+    with _LOCK:
+        _DEFAULT = None
+        _DEFAULT_LOADED = False
+
+
+@contextlib.contextmanager
+def use_cache(cache: TuneCache | str | None) -> Iterator[TuneCache | None]:
+    """Scoped `set_active_cache` — the test/suite-facing surface."""
+    global _ACTIVE
+    if isinstance(cache, str):
+        cache = TuneCache.load(cache)
+    with _LOCK:
+        prev = _ACTIVE
+        _ACTIVE = cache
+    try:
+        yield cache
+    finally:
+        with _LOCK:
+            _ACTIVE = prev
+
+
+# ---------------------------------------------------------------- lookups
+def lookup_dense(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    batch: int = 1,
+    dtype_bytes: int,
+    amp: float,
+    chip: hw.ChipSpec,
+) -> BlockPlan | None:
+    cls = ShapeClass.of(m, k, n, batch)
+    entry = get_active_cache().get(dense_key(chip.name, dtype_bytes, amp, cls))
+    return None if entry is None else entry.plan
+
+
+def lookup_sparse(
+    summary: LayoutSummary,
+    n: int,
+    *,
+    dtype_bytes: int,
+    amp: float,
+    chip: hw.ChipSpec,
+) -> BlockPlan | None:
+    entry = get_active_cache().get(sparse_key(chip.name, dtype_bytes, amp, summary, n))
+    return None if entry is None else entry.plan
+
+
+def lookup_grouped(
+    groups: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    dtype_bytes: int,
+    amp: float,
+    chip: hw.ChipSpec,
+) -> BlockPlan | None:
+    cls = ShapeClass.of(m, k, n)
+    entry = get_active_cache().get(
+        grouped_key(chip.name, dtype_bytes, amp, groups, cls)
+    )
+    return None if entry is None else entry.plan

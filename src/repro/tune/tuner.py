@@ -1,0 +1,368 @@
+"""Measured plan selection: time the modeled top-K candidates, keep the winner.
+
+The cost model ranks candidate (schedule, blocks) plans; this module
+*times* the best K of them on a host and records the empirical winner as
+a `TuneEntry`.  The modeled argmin is always among the timed candidates,
+so the recorded ``speedup`` (measured time of the modeled plan over
+measured time of the winner) is >= 1 by construction and ``agreement``
+flags the cases where measurement just confirms the model.
+
+Measurement is injected through the `Measurer` seam so selection logic
+is testable without wall-clock flakiness and the ``tuned`` benchmark
+suite can run against a deterministic synthetic host:
+
+* `wallclock_measurer` — the real thing: builds the operands, jits the
+  kernel with the candidate plan pinned, and times it with
+  `repro.bench.timing.measure` (every iteration blocked).
+* `modeled_measurer(chip)` — returns the cost model's own prediction,
+  optionally re-costed under a different `ChipSpec` (a "synthetic
+  host"): pure arithmetic, bit-deterministic, zero wall-clock.
+
+A measurer is called as ``measurer(candidate, make_bench, iters=...,
+repeats=...)`` where `make_bench` is a zero-arg thunk producing
+``(fn, args)`` — deterministic measurers never call it, so no arrays are
+built and nothing is compiled on the modeled path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol, Sequence
+
+from repro.core import config, hw
+from repro.core.costmodel import MatmulCost, cost_matmul
+from repro.core.planner import enumerate_plans
+from repro.sparse.costmodel import SparseMatmulCost, cost_sparse_matmul
+from repro.sparse.layout import BlockSparseLayout, LayoutSummary
+from repro.sparse.planner import enumerate_grouped_plans, enumerate_sparse_plans
+from repro.tune import cache as tune_cache
+from repro.tune.shapeclass import ShapeClass, bucket_dim
+from repro.bench.timing import Timing, measure
+
+Candidate = Any  # MatmulCost | SparseMatmulCost
+MakeBench = Callable[[], tuple[Callable, tuple]]
+
+
+class Measurer(Protocol):
+    def __call__(
+        self,
+        candidate: Candidate,
+        make_bench: MakeBench,
+        *,
+        iters: int,
+        repeats: int,
+    ) -> Timing: ...
+
+
+def remodel(candidate: Candidate, chip: hw.ChipSpec) -> Candidate:
+    """Re-evaluate a candidate's cost under a different chip model."""
+    if isinstance(candidate, MatmulCost):
+        return cost_matmul(candidate.dims, candidate.plan, chip)
+    if isinstance(candidate, SparseMatmulCost):
+        return cost_sparse_matmul(
+            candidate.layout,
+            candidate.n,
+            candidate.plan,
+            chip,
+            dtype_bytes=candidate.dtype_bytes,
+        )
+    raise TypeError(f"cannot remodel {type(candidate).__name__}")
+
+
+def wallclock_measurer(
+    candidate: Candidate,
+    make_bench: MakeBench,
+    *,
+    iters: int,
+    repeats: int,
+) -> Timing:
+    """Real host timing through `bench.timing.measure`."""
+    del candidate  # the bench thunk already has the plan pinned
+    fn, args = make_bench()
+    return measure(fn, *args, iters=iters, repeats=repeats)
+
+
+def modeled_measurer(chip: hw.ChipSpec | str | None = None) -> Measurer:
+    """Deterministic measurer: the cost model's prediction as the "host".
+
+    With `chip` given, candidates are re-costed under that spec — a
+    synthetic host whose constants deliberately differ from the planning
+    chip, so tuned-vs-modeled disagreement is exercised without touching
+    a clock.  With `chip` None the measurement *is* the model, in which
+    case selection must reproduce the modeled argmin exactly (tested).
+    """
+    spec = None if chip is None else hw.get_chip(chip)
+
+    def _measure(
+        candidate: Candidate,
+        make_bench: MakeBench,
+        *,
+        iters: int,
+        repeats: int,
+    ) -> Timing:
+        del make_bench  # never build arrays on the modeled path
+        c = candidate if spec is None else remodel(candidate, spec)
+        return Timing(
+            median_us=c.total_s * 1e6,
+            iqr_us=0.0,
+            repeats=repeats,
+            iters=iters,
+        )
+
+    return _measure
+
+
+# -------------------------------------------------------------- selection
+def _select_entry(
+    key: str,
+    kind: str,
+    chip: hw.ChipSpec,
+    dtype_bytes: int,
+    amp: float,
+    candidates: Sequence[Candidate],
+    bench_for: Callable[[Candidate], MakeBench],
+    measurer: Measurer,
+    iters: int,
+    repeats: int,
+) -> tune_cache.TuneEntry:
+    """Time every candidate, return the winner as a cache entry.
+
+    `candidates` must be modeled-best-first (the enumerate_* contract);
+    ties in measured time break toward the modeled order, so a
+    measurement that cannot distinguish two plans never overrides the
+    model's preference.
+    """
+    if not candidates:
+        raise ValueError("no candidate plans to tune over")
+    measured = [
+        measurer(c, bench_for(c), iters=iters, repeats=repeats).us_per_call
+        for c in candidates
+    ]
+    win_i = min(range(len(candidates)), key=lambda i: (measured[i], i))
+    winner = candidates[win_i]
+    best = candidates[0]
+    p, bp = winner.plan, best.plan
+    return tune_cache.TuneEntry(
+        key=key,
+        kind=kind,
+        chip=chip.name,
+        dtype_bytes=dtype_bytes,
+        amp=amp,
+        schedule=p.schedule,
+        blocks=(p.bm, p.bk, p.bn),
+        batch_grid=p.batch_grid,
+        measured_us=measured[win_i],
+        modeled_us=winner.total_s * 1e6,
+        modeled_best_schedule=bp.schedule,
+        modeled_best_blocks=(bp.bm, bp.bk, bp.bn),
+        modeled_best_measured_us=measured[0],
+        agreement=win_i == 0,
+        speedup=measured[0] / measured[win_i],
+        provenance=tune_cache.entry_provenance(iters, repeats),
+    )
+
+
+def _np_dtype(dtype_bytes: int):
+    import jax.numpy as jnp
+
+    return {2: jnp.bfloat16, 4: jnp.float32}.get(dtype_bytes, jnp.float32)
+
+
+# ------------------------------------------------------------------ dense
+def tune_dense(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    batch: int = 1,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    top: int = 8,
+    iters: int = 1,
+    repeats: int = 3,
+    measurer: Measurer = wallclock_measurer,
+) -> tune_cache.TuneEntry:
+    """Tune the shape class of A[batch, m, k] @ B[k, n], return the entry.
+
+    The *bucket representative* (power-of-two floor per dim) is what gets
+    measured, so one entry answers every shape in the class.  amp / chip
+    resolve through the `mm_config` stack as everywhere else.
+    """
+    cfg = config.resolve(amp=amp, chip=chip)
+    chip, amp = cfg.chip_spec, cfg.amp
+    cls = ShapeClass.of(m, k, n, batch)
+    candidates = enumerate_plans(
+        cls.m,
+        cls.k,
+        cls.n,
+        dtype_bytes=dtype_bytes,
+        amp=amp,
+        chip=chip,
+        batch=cls.batch,
+        top=top,
+    )
+
+    def bench_for(cost: MatmulCost) -> MakeBench:
+        def make_bench():
+            import jax
+            import jax.numpy as jnp
+
+            from repro.kernels import ops
+
+            dtype = _np_dtype(dtype_bytes)
+            plan = cost.plan
+            if cls.batch > 1 and plan.batch_grid:
+                a = jnp.ones((cls.batch, cls.m, cls.k), dtype)
+                b = jnp.ones((cls.k, cls.n), dtype)
+                fn = jax.jit(lambda x, y: ops.skew_matmul_batched(x, y, plan=plan))
+            else:
+                a = jnp.ones((cls.batch * cls.m, cls.k), dtype)
+                b = jnp.ones((cls.k, cls.n), dtype)
+                fn = jax.jit(lambda x, y: ops.skew_matmul(x, y, plan=plan))
+            return fn, (a, b)
+
+        return make_bench
+
+    return _select_entry(
+        tune_cache.dense_key(chip.name, dtype_bytes, amp, cls),
+        "dense",
+        chip,
+        dtype_bytes,
+        amp,
+        candidates,
+        bench_for,
+        measurer,
+        iters,
+        repeats,
+    )
+
+
+# ----------------------------------------------------------------- sparse
+def tune_sparse(
+    layout: BlockSparseLayout | LayoutSummary,
+    n: int,
+    *,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    top: int = 8,
+    iters: int = 1,
+    repeats: int = 3,
+    measurer: Measurer = wallclock_measurer,
+) -> tune_cache.TuneEntry:
+    """Tune sparse(A) @ B for one exact layout structure.
+
+    Sparse entries are keyed on the full `LayoutSummary` (structure is
+    not bucketable — the winner depends on it); only the rhs width `n`
+    is bucketed.  Wall-clock measurement needs a concrete
+    `BlockSparseLayout`; given only a summary, an equivalent random
+    structure at the summary's density is synthesized for the bench (the
+    candidate costs still use the exact summary).
+    """
+    summary = layout.summary() if hasattr(layout, "summary") else layout
+    cfg = config.resolve(amp=amp, chip=chip)
+    chip, amp = cfg.chip_spec, cfg.amp
+    n_rep = bucket_dim(n)
+    candidates = enumerate_sparse_plans(
+        summary, n_rep, dtype_bytes=dtype_bytes, amp=amp, chip=chip, top=top
+    )
+
+    def bench_for(cost: SparseMatmulCost) -> MakeBench:
+        def make_bench():
+            import jax
+            import jax.numpy as jnp
+
+            from repro.kernels import ops
+
+            dtype = _np_dtype(dtype_bytes)
+            if isinstance(layout, BlockSparseLayout):
+                concrete = layout
+            else:
+                concrete = BlockSparseLayout.random(
+                    summary.m,
+                    summary.k,
+                    (summary.bm, summary.bk),
+                    summary.density,
+                )
+            a = jnp.ones((summary.m, summary.k), dtype)
+            b = jnp.ones((summary.k, n_rep), dtype)
+            plan = cost.plan
+            fn = jax.jit(lambda x, y: ops.sparse_matmul(x, y, concrete, plan=plan))
+            return fn, (a, b)
+
+        return make_bench
+
+    return _select_entry(
+        tune_cache.sparse_key(chip.name, dtype_bytes, amp, summary, n),
+        "sparse",
+        chip,
+        dtype_bytes,
+        amp,
+        candidates,
+        bench_for,
+        measurer,
+        iters,
+        repeats,
+    )
+
+
+# ---------------------------------------------------------------- grouped
+def tune_grouped(
+    groups: int,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    top: int = 8,
+    iters: int = 1,
+    repeats: int = 3,
+    measurer: Measurer = wallclock_measurer,
+) -> tune_cache.TuneEntry:
+    """Tune `groups` independent A[m, k] @ B[k, n] expert GEMMs."""
+    cfg = config.resolve(amp=amp, chip=chip)
+    chip, amp = cfg.chip_spec, cfg.amp
+    cls = ShapeClass.of(m, k, n)
+    candidates = enumerate_grouped_plans(
+        groups,
+        cls.m,
+        cls.k,
+        cls.n,
+        dtype_bytes=dtype_bytes,
+        amp=amp,
+        chip=chip,
+        top=top,
+    )
+
+    def bench_for(cost: SparseMatmulCost) -> MakeBench:
+        def make_bench():
+            import jax
+            import jax.numpy as jnp
+
+            from repro.kernels import ops
+
+            dtype = _np_dtype(dtype_bytes)
+            a = jnp.ones((groups, cls.m, cls.k), dtype)
+            b = jnp.ones((groups, cls.k, cls.n), dtype)
+            plan = cost.plan
+            fn = jax.jit(
+                lambda x, y: ops.grouped_matmul(x, y, plan=plan, backend="pallas")
+            )
+            return fn, (a, b)
+
+        return make_bench
+
+    return _select_entry(
+        tune_cache.grouped_key(chip.name, dtype_bytes, amp, groups, cls),
+        "grouped",
+        chip,
+        dtype_bytes,
+        amp,
+        candidates,
+        bench_for,
+        measurer,
+        iters,
+        repeats,
+    )

@@ -142,6 +142,9 @@ def test_metric_tolerance_policy():
     assert not cmp_mod.metric_tolerance("hlo_gib").gated
     assert not cmp_mod.metric_tolerance("collective_gib").gated
     assert not cmp_mod.metric_tolerance("useful_ratio").gated
+    # modeled speedup ratios (sparse-vs-dense, tuned-vs-modeled) gate
+    assert cmp_mod.metric_tolerance("speedup").gated
+    assert cmp_mod.metric_tolerance("mean_speedup").gated
 
 
 # ----------------------------------------------------------------- timing
@@ -160,6 +163,41 @@ def test_measure_blocks_every_iteration_and_reports_median():
     assert t.repeats == 3 and t.iters == 2
     with pytest.raises(ValueError):
         measure(fn, iters=0)
+
+
+def test_measure_blocks_through_block_until_ready(monkeypatch):
+    """Regression for the PR-3 async-dispatch fix: `block_until_ready`
+    runs on EVERY timed iteration (plus the warmup), so JAX's async
+    dispatch can never overlap iterations and under-report."""
+    import jax
+
+    real = jax.block_until_ready
+    blocked = []
+    monkeypatch.setattr(
+        jax, "block_until_ready", lambda x: blocked.append(1) or real(x))
+    measure(lambda: jnp.ones((2,)), iters=3, repeats=4)
+    assert len(blocked) == 1 + 3 * 4
+
+
+def test_measure_repeats_one_has_zero_iqr():
+    t = measure(lambda: jnp.zeros((4,)), iters=1, repeats=1)
+    assert t.repeats == 1 and t.iters == 1
+    assert t.iqr_us == 0.0
+    assert t.median_us > 0
+    assert t.us_per_call == t.median_us
+    with pytest.raises(ValueError):
+        measure(lambda: jnp.zeros((4,)), repeats=0)
+
+
+def test_measure_callable_returning_pytree():
+    """Blocking must traverse arbitrary pytree outputs (dict/tuple/list),
+    not just a single array."""
+
+    def fn(x):
+        return {"a": x + 1, "b": (x * 2, [x, x - 1])}
+
+    t = measure(fn, jnp.ones((8, 8)), iters=2, repeats=2)
+    assert t.median_us > 0 and t.repeats == 2
 
 
 # ------------------------------------------------------------ suite smoke
@@ -243,6 +281,22 @@ def test_committed_fig5_baselines_match_paper_numbers():
     assert gc200["naive_spread"] == pytest.approx(0.096, abs=0.01)
     assert rtx["naive_spread"] == pytest.approx(0.263, abs=0.01)
     assert gc200["naive_spread"] < rtx["naive_spread"]
+
+
+def test_committed_tuned_baselines_reproduce_chip_ordering():
+    """The tuned suite's synthetic-host verdict, committed: the GC200's
+    modeled plans survive the host perturbation (uniform-latency SRAM)
+    while the cache-budgeted GPU's mostly lose."""
+    by_name = _committed("tuned")
+    gc200 = by_name["tuned_ipu_gc200_summary"].metrics
+    rtx = by_name["tuned_gpu_rtx2080ti_summary"].metrics
+    assert gc200["agreement_frac"] == pytest.approx(1.0)
+    assert rtx["agreement_frac"] < gc200["agreement_frac"]
+    assert rtx["mean_speedup"] > 1.0
+    assert gc200["mean_speedup"] == pytest.approx(1.0)
+    for r in by_name.values():
+        if "speedup" in r.metrics:
+            assert r.metrics["speedup"] >= 1.0
 
 
 def test_committed_baselines_gate_a_tiny_run():

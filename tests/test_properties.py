@@ -14,6 +14,8 @@ from repro.kernels import ops, ref
 from repro.models import layers
 from repro.optim import compression
 from repro.sparse import BlockSparseLayout
+from repro.tune import calibrate
+from repro.tune.shapeclass import ShapeClass, bucket_dim
 
 SET = settings(max_examples=25, deadline=None)
 
@@ -88,6 +90,47 @@ def test_block_sparse_matmul_property(m, k, n, density, seed):
     got = ops.sparse_matmul(a, b, layout)
     want = ref.block_sparse_matmul_ref(a, b, layout)
     np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-4)
+
+
+@SET
+@given(m=st.integers(1, 1 << 20), k=st.integers(1, 1 << 20),
+       n=st.integers(1, 1 << 20), batch=st.integers(1, 256))
+def test_shape_class_bucketing_is_a_partition(m, k, n, batch):
+    """Autotuner bucketing (repro.tune): every (m, k, n) maps to exactly
+    one shape class, and class representatives map to themselves."""
+    cls = ShapeClass.of(m, k, n, batch)
+    for dim, rep in zip((m, k, n, batch),
+                        (cls.m, cls.k, cls.n, cls.batch)):
+        # dim lies in the unique half-open dyadic bucket [rep, 2*rep):
+        # buckets tile the positive integers, so membership in exactly
+        # one bucket follows.
+        assert rep <= dim < 2 * rep
+        # the representative is a fixed point of the bucketing
+        assert bucket_dim(rep) == rep
+    # idempotence: bucketing a representative shape is the identity
+    assert ShapeClass.of(cls.m, cls.k, cls.n, cls.batch) == cls
+    # and the cache-key fragment is a pure function of the class
+    assert cls.token == ShapeClass.of(m, k, n, batch).token
+
+
+@SET
+@given(measured=st.floats(min_value=1e-12, max_value=1e12),
+       modeled=st.floats(min_value=1e-12, max_value=1e12))
+def test_correction_factor_stays_in_unit_interval(measured, modeled):
+    """Calibration (repro.tune): a fitted efficiency is always in (0, 1]
+    whatever the measured/modeled ratio — a host may be arbitrarily
+    slower than the model but is never credited as beating the roofline."""
+    f = calibrate.correction_factor(measured, modeled)
+    assert 0.0 < f <= 1.0
+
+
+@SET
+@given(base=st.floats(min_value=1e-9, max_value=1.0),
+       ratios=st.lists(st.floats(min_value=1e-12, max_value=1e12),
+                       max_size=8))
+def test_fitted_gather_frac_stays_in_unit_interval(base, ratios):
+    f = calibrate.fit_gather_frac(base, ratios)
+    assert 0.0 < f <= 1.0
 
 
 @SET

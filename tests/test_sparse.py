@@ -306,6 +306,33 @@ def test_sparse_planner_respects_gc200_amp_budget(amp):
             or cost.plan.bn == chip.mxu_lanes)
 
 
+def test_mm_config_changes_inside_with_block_not_served_stale_plans():
+    """The sparse planners' lru caches are keyed on the *resolved*
+    config (amp/chip/mode all in the key), so nested `mm_config` changes
+    inside a with block must re-plan — never serve an outer layer's
+    cached plan — and popping the layer must restore the outer plan."""
+    summary = LayoutSummary.balanced(2048, 2048, (128, 128), 0.25)
+    with mm_config(chip="ipu_gc200", amp=0.9):
+        outer = plan_sparse_matmul(summary, 2048)
+        outer_g = plan_grouped_matmul(4, 256, 1024, 2048)
+        with mm_config(amp=0.002):
+            inner = plan_sparse_matmul(summary, 2048)
+            inner_g = plan_grouped_matmul(4, 256, 1024, 2048)
+            # the shrunken budget must be visible in the inner plans
+            chip = hw.get_chip("ipu_gc200")
+            assert inner.vmem_bytes <= 0.002 * chip.vmem_bytes \
+                or inner.plan.bn == chip.mxu_lanes
+            assert inner.vmem_bytes < outer.vmem_bytes
+            assert inner_g.vmem_bytes < outer_g.vmem_bytes
+        with mm_config(chip="gpu_rtx2080ti"):
+            cross = plan_sparse_matmul(summary, 2048)
+            assert cross.total_s != outer.total_s
+        # back in the outer layer: identical plan again (and the lru
+        # cache serves the same object — keyed correctly, not cleared)
+        assert plan_sparse_matmul(summary, 2048) is outer
+        assert plan_grouped_matmul(4, 256, 1024, 2048) is outer_g
+
+
 def test_sparse_planner_skips_b_resident():
     """Under CSR structure B cannot actually stay resident; the planner
     must never pick the dominated schedule."""
