@@ -27,6 +27,12 @@ Suites:
                 agreement rate and speedup per chip, gated in CI
   train       — reduced-config train-step wall time per arch family
   decode      — reduced-config decode wall time per arch family
+  guard       — chaos smoke: deterministic fault injection
+                (repro.guard) through the real dispatch path; gates the
+                fault ledger (faults_caught == faults_injected), the
+                degradation-ladder landing level and the quarantine /
+                decode-scrub behavior — all counters, identical at both
+                fidelities
 
 CLI::
 
@@ -560,6 +566,139 @@ def bench_decode_step(rec, ctx):
             info={"family": cfg.family},
             timing=timing,
         )
+
+
+@SUITE.register("guard")
+def tab_guard_chaos(rec, ctx):
+    """Chaos smoke: seeded fault injection through the real dispatch path.
+
+    Every row runs one failure scenario under `fault_scope` (deterministic
+    seeded draws — same counters on every host) and records the guard
+    health ledger: injections must equal catches (zero silent escapes),
+    the degradation ladder must land on the expected level, and the
+    output must still match the XLA oracle.  Counters are integers gated
+    exactly against the committed baseline; there is nothing measured
+    here, so tiny and full fidelity are the same run.
+    """
+    import tempfile
+
+    from repro import guard
+    from repro.guard import fallback as gfallback
+    from repro.guard import faults as gfaults
+    from repro.guard import health as ghealth
+    from repro.kernels import ops
+    from repro.tune import runtime as tune_runtime
+    from repro.tune.cache import TuneCache, load_or_quarantine
+
+    del ctx  # counters only; identical at both fidelities
+
+    a = jnp.linspace(-1.0, 1.0, 256 * 192, dtype=jnp.float32).reshape(256, 192)
+    b = jnp.linspace(1.0, -1.0, 192 * 320, dtype=jnp.float32).reshape(192, 320)
+    oracle = jnp.matmul(a, b)
+
+    def scenario(name, body, **axes):
+        guard.reset()
+        try:
+            extra = body()
+            snap = ghealth.snapshot()
+            injected = snap.get("faults_injected", 0)
+            caught = snap.get("faults_caught", 0)
+            rec(
+                f"guard_{name}",
+                axes={"scenario": name, **axes},
+                metrics={
+                    "faults_injected": injected,
+                    "faults_caught": caught,
+                    "ledger_balanced": int(injected == caught),
+                    "fallback_level": gfallback.max_floor(),
+                    "retries": snap.get("retries", 0),
+                    **extra,
+                },
+                info={"counters": "/".join(
+                    f"{k}:{v}" for k, v in sorted(snap.items()))},
+            )
+        finally:
+            guard.reset()
+
+    def all_faults():
+        # Every fault kind armed at once, plan_mode=tuned so the cache
+        # path is live (empty cache: the corrupt-lookup injection fires
+        # on the miss).  The ladder must walk down to the XLA reference
+        # rung and the output must still be the oracle.
+        with tune_runtime.use_cache(TuneCache()), \
+                mm_config(plan_mode="tuned"), \
+                gfaults.fault_scope(seed=7):
+            out = ops.skew_matmul(a, b)
+        return {"outputs_ok": int(bool(
+            jnp.allclose(out, oracle, rtol=1e-4, atol=1e-4)))}
+
+    def transient_recovers():
+        # Two transient raises, default retry budget of two: the retry
+        # loop absorbs both and the preferred level still answers — the
+        # ladder floor must stay at 0 (no degradation latched).
+        with gfaults.fault_scope(seed=11, kinds=("transient_raise",),
+                                 max_transient=2):
+            out = ops.skew_matmul(a, b)
+        return {"outputs_ok": int(bool(
+            jnp.allclose(out, oracle, rtol=1e-4, atol=1e-4)))}
+
+    def amp_overflow():
+        # Squeezed AMP budget: the modeled plan is re-costed pre-dispatch
+        # and rejected; the conservative rung's min-granule plan is always
+        # admissible, so the ladder lands there (level 2), not at the
+        # reference.
+        with gfaults.fault_scope(seed=23, kinds=("amp_overflow",),
+                                 amp_squeeze=1e6):
+            out = ops.skew_matmul(a, b)
+        return {
+            "outputs_ok": int(bool(
+                jnp.allclose(out, oracle, rtol=1e-4, atol=1e-4))),
+            "plans_rejected": ghealth.get("plans_rejected"),
+        }
+
+    def cache_quarantine():
+        # A truncated on-disk tune cache is moved aside to <path>.corrupt
+        # and replaced with an empty cache (tuned lookups miss -> modeled
+        # planning), never an exception.
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "tune_cache.json")
+            with open(path, "w") as fh:
+                fh.write('{"schema_version":')
+            cache, problem = load_or_quarantine(path)
+            return {
+                "quarantined": int(problem is not None),
+                "quarantine_moved": int(os.path.exists(path + ".corrupt")),
+                "cache_entries": len(cache.entries),
+            }
+
+    def decode_scrub():
+        # Poisoned decode logits: the serving boundary detects the
+        # non-finite batch and re-runs the step on the XLA reference
+        # backend — the returned logits must be finite.
+        from repro.configs.base import get_config
+        from repro.models.model import build_model
+        from repro.serve import engine
+
+        cfg = get_config("mamba2-2.7b").reduced()
+        bundle = build_model(cfg)
+        params = bundle.init(jax.random.PRNGKey(0))
+        cache, _ = engine.prefill(
+            params, cfg, jnp.zeros((2, 8), jnp.int32), max_len=16)
+        with gfaults.fault_scope(seed=5,
+                                 kinds=("nan_output", "inf_output")):
+            logits, _ = engine.guarded_decode_step(
+                params, cfg, cache, jnp.zeros((2,), jnp.int32),
+                jnp.asarray(8, jnp.int32))
+        return {
+            "scrubbed": ghealth.get("scrubbed_batches"),
+            "outputs_ok": int(bool(jnp.isfinite(logits).all())),
+        }
+
+    scenario("all_faults", all_faults)
+    scenario("transient_recovers", transient_recovers)
+    scenario("amp_overflow", amp_overflow)
+    scenario("cache_quarantine", cache_quarantine)
+    scenario("decode_scrub", decode_scrub)
 
 
 def main(argv=None) -> int:

@@ -37,6 +37,20 @@ _EXACT_NAMES = frozenset(
         "best_n",
         "grid_steps",
         "repeats",
+        # Guard-suite health counters: seeded fault injection is exactly
+        # reproducible, so the whole ledger is gated integer-exact.
+        "faults_injected",
+        "faults_caught",
+        "ledger_balanced",
+        "fallback_level",
+        "retries",
+        "outputs_ok",
+        "plans_rejected",
+        "quarantined",
+        "quarantine_moved",
+        "cache_entries",
+        "scrubbed",
+        "outliers",
     },
 )
 # "speedup" metrics are modeled time ratios (sparse-vs-dense, the tuned

@@ -100,6 +100,7 @@ class Provenance:
     blocks: tuple[int, int, int] | None = None
     batch_grid: bool | None = None
     grid_steps: int | None = None
+    guard: dict | None = None
 
     @classmethod
     def capture(cls, config: Any = None, plan: Any = None) -> "Provenance":
@@ -109,8 +110,13 @@ class Provenance:
         suite running under ``with mm_config(chip=...):`` records the chip
         it actually planned for.  `plan` is a `MatmulCost` (or provenance
         dict) for the record's headline matmul, when there is one.
+        `guard` snapshots the health counters (repro.guard.health) when
+        any are non-zero — a record produced on a degraded process
+        (faults caught, ladder tripped) says so; a clean process leaves
+        the field absent so ordinary documents are unchanged.
         """
         from repro.core import config as mmcfg
+        from repro.guard import health as guard_health
 
         cfg = config if config is not None else mmcfg.current()
         return cls(
@@ -118,6 +124,7 @@ class Provenance:
             jax_version=_jax_version(),
             python_version=platform.python_version(),
             git_sha=git_sha(),
+            guard=guard_health.provenance_fields(),
             **_plan_fields(plan),
         )
 
@@ -125,12 +132,16 @@ class Provenance:
         d = dataclasses.asdict(self)
         if d["blocks"] is not None:
             d["blocks"] = list(d["blocks"])
+        if d["guard"] is None:
+            del d["guard"]  # clean-process records stay byte-identical
         return d
 
     @classmethod
     def from_json(cls, d: Mapping[str, Any]) -> "Provenance":
         if not isinstance(d, Mapping):
             raise SchemaError(f"provenance must be an object, got {type(d)}")
+        if d.get("guard") is not None and not isinstance(d["guard"], Mapping):
+            raise SchemaError("provenance guard must be an object")
         required = {
             "chip",
             "amp",
@@ -150,6 +161,8 @@ class Provenance:
         kw = dict(d)
         if kw.get("blocks") is not None:
             kw["blocks"] = tuple(int(b) for b in kw["blocks"])
+        if kw.get("guard") is not None:
+            kw["guard"] = dict(kw["guard"])
         return cls(**kw)
 
 
@@ -188,6 +201,7 @@ class BenchResult:
     us_per_call: float | None = None
     us_iqr: float | None = None
     repeats: int = 0
+    outliers: int = 0
 
     def to_json(self) -> dict[str, Any]:
         return {
@@ -200,6 +214,7 @@ class BenchResult:
             "us_per_call": self.us_per_call,
             "us_iqr": self.us_iqr,
             "repeats": self.repeats,
+            "outliers": self.outliers,
         }
 
     @classmethod
@@ -243,6 +258,7 @@ class BenchResult:
             us_per_call=None if us is None else float(us),
             us_iqr=None if d.get("us_iqr") is None else float(d["us_iqr"]),
             repeats=int(d.get("repeats", 0)),
+            outliers=int(d.get("outliers", 0)),
         )
 
     def csv_row(self) -> str:

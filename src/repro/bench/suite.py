@@ -77,6 +77,7 @@ class Recorder:
             us_per_call=None if timing is None else timing.median_us,
             us_iqr=None if timing is None else timing.iqr_us,
             repeats=0 if timing is None else timing.repeats,
+            outliers=0 if timing is None else timing.outliers,
         )
         self._sink.append(record)
         if self._echo is not None:

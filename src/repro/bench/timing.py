@@ -9,6 +9,18 @@ every iteration's result before the clock is read again, and summarizes
 with the median over independent repeats (plus the IQR as a stability
 signal) instead of a single mean, so one noisy repeat cannot skew the
 reported number.
+
+Repeats are additionally screened with one-sided MAD outlier rejection:
+a repeat whose per-call time exceeds the median by more than 3.5
+normalized median-absolute-deviations (a GC pause, a background burp)
+is excluded from the median/IQR and counted in `Timing.outliers` —
+so the autotuner never crowns a winner off a straggler sample.  Only
+slow repeats are rejected (a fast sample is information, not noise),
+and rejection needs >= 4 repeats to have a meaningful MAD at all.
+
+The `tuner_outlier` fault kind (repro.guard.faults) injects here:
+an armed scope inflates whole repeats deterministically, and the MAD
+screen catching them is what the guard suite's ledger gates.
 """
 
 from __future__ import annotations
@@ -20,19 +32,46 @@ from typing import Any, Callable
 
 import jax
 
+from repro.guard import faults as _faults
+from repro.guard import health as _health
+
+# Modified z-score cutoff: 3.5 normalized MADs (1.4826 * MAD ~ one sigma
+# for normal noise), one-sided.  The relative floor keeps near-identical
+# samples from tripping the screen when the MAD degenerates to ~0.
+_MAD_CUTOFF = 3.5
+_MAD_NORMALIZE = 1.4826
+_REL_FLOOR = 0.05
+
 
 @dataclasses.dataclass(frozen=True)
 class Timing:
-    """Measured wall time: median/IQR in microseconds over `repeats`."""
+    """Measured wall time: median/IQR in microseconds over the repeats
+    that survived outlier rejection (`outliers` = rejected count)."""
 
     median_us: float
     iqr_us: float
     repeats: int
     iters: int
+    outliers: int = 0
 
     @property
     def us_per_call(self) -> float:
         return self.median_us
+
+
+def reject_outliers(samples: list[float]) -> list[int]:
+    """Indices of samples surviving one-sided MAD rejection.
+
+    Keeps everything below ``median + 3.5 * 1.4826 * MAD`` (with a 5%
+    relative floor on the threshold width); fewer than 4 samples are
+    always all kept — a MAD over 2-3 points rejects on noise.
+    """
+    if len(samples) < 4:
+        return list(range(len(samples)))
+    med = statistics.median(samples)
+    mad = statistics.median(abs(x - med) for x in samples)
+    cutoff = med + max(_MAD_CUTOFF * _MAD_NORMALIZE * mad, _REL_FLOOR * med)
+    return [i for i, x in enumerate(samples) if x <= cutoff]
 
 
 def measure(
@@ -46,27 +85,40 @@ def measure(
     One untimed warmup call triggers compilation.  Each repeat times
     ``iters`` calls, blocking on every call's output (`block_until_ready`
     inside the loop — async dispatch cannot overlap iterations), and
-    contributes elapsed/iters.  The median over repeats is the headline
-    number; the interquartile range is reported alongside so consumers
-    can see how stable the measurement was.
+    contributes elapsed/iters.  The median over surviving repeats is the
+    headline number; the interquartile range is reported alongside so
+    consumers can see how stable the measurement was, and straggler
+    repeats rejected by the MAD screen are counted in `outliers`.
     """
     if iters < 1 or repeats < 1:
         raise ValueError(f"iters and repeats must be >= 1, got {iters}/{repeats}")
     jax.block_until_ready(fn(*args))
     per_call_us = []
-    for _ in range(repeats):
+    inflated: set[int] = set()
+    for r in range(repeats):
         t0 = time.perf_counter()
         for _ in range(iters):
             jax.block_until_ready(fn(*args))
-        per_call_us.append((time.perf_counter() - t0) / iters * 1e6)
-    if len(per_call_us) >= 2:
-        q1, _, q3 = statistics.quantiles(per_call_us, n=4)
+        dt_us = (time.perf_counter() - t0) / iters * 1e6
+        scale = _faults.outlier_scale("measure")
+        if scale is not None:
+            dt_us *= scale
+            inflated.add(r)
+        per_call_us.append(dt_us)
+    kept_idx = reject_outliers(per_call_us)
+    caught = sum(1 for r in inflated if r not in kept_idx)
+    if caught:
+        _health.record("faults_caught", caught)
+    kept = [per_call_us[i] for i in kept_idx]
+    if len(kept) >= 2:
+        q1, _, q3 = statistics.quantiles(kept, n=4)
         iqr = q3 - q1
     else:
         iqr = 0.0
     return Timing(
-        median_us=statistics.median(per_call_us),
+        median_us=statistics.median(kept),
         iqr_us=iqr,
         repeats=repeats,
         iters=iters,
+        outliers=len(per_call_us) - len(kept),
     )

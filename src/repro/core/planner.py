@@ -175,11 +175,18 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
 def _plan_matmul_tuned(m: int, k: int, n: int, *, dtype_bytes: int,
                        amp: float, chip: hw.ChipSpec,
                        batch: int) -> MatmulCost:
+    from repro.guard import faults as guard_faults  # planner <- guard cycle
+    from repro.guard import health as guard_health
     from repro.tune import runtime as tune_runtime  # planner <- tune cycle
 
     plan = tune_runtime.lookup_dense(m, k, n, batch=batch,
                                      dtype_bytes=dtype_bytes, amp=amp,
                                      chip=chip)
+    if guard_faults.is_corrupt_plan(plan):
+        # A corrupted/stale cache entry (injected or real): ledger the
+        # catch and fall through to the modeled plan below.
+        guard_health.record("faults_caught")
+        plan = None
     if plan is not None:
         d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
         # The winner was measured on the bucket representative; the actual

@@ -2,15 +2,18 @@
 
 On a real multi-pod deployment these hooks wrap the device runtime; in this
 CPU container they are exercised by unit tests with injected failures
-(tests/test_fault_tolerance.py).  The mechanisms:
+(tests/test_fault_tolerance.py).  The retry and straggler mechanisms are
+thin wrappers over the guard subsystem's primitives (repro.guard.fallback)
+so the training loop and the guarded matmul path share one retry/backoff
+implementation and one health ledger:
 
   * StepGuard — runs one training step with a wall-clock deadline (straggler
     mitigation: a step exceeding `deadline_factor` x the trailing-median is
     declared straggled; the caller re-dispatches it, in production onto a
-    re-formed mesh that excludes the slow host);
-  * retry_step — bounded retry of a step on transient failure, restoring
-    from the last known-good state (the step function is pure, so replay is
-    exact);
+    re-formed mesh that excludes the slow host) — `fallback.StragglerGuard`;
+  * retry_step — bounded retry of a step on transient failure with jittered
+    exponential backoff, restoring from the last known-good state (the step
+    function is pure, so replay is exact) — `fallback.retry_call`;
   * ElasticPlan — given a checkpoint's mesh shape and the surviving device
     count, pick the largest valid mesh and report the resharding plan
     (checkpoints are mesh-agnostic, see checkpoint.ckpt).
@@ -19,34 +22,24 @@ CPU container they are exercised by unit tests with injected failures
 from __future__ import annotations
 
 import dataclasses
-import statistics
-import time
 from typing import Any, Callable
 
-
-class StepFailed(RuntimeError):
-    pass
+from repro.guard.fallback import Backoff, StragglerGuard, TransientFault
 
 
-@dataclasses.dataclass
-class StepGuard:
-    deadline_factor: float = 3.0
-    min_history: int = 5
-    _history: list = dataclasses.field(default_factory=list)
+class StepFailed(TransientFault):
+    """A training step failed transiently (injected or infrastructure)."""
 
-    def run(self, fn: Callable[[], Any]) -> tuple[Any, bool]:
-        """Returns (result, straggled)."""
-        t0 = time.monotonic()
-        out = fn()
-        dt = time.monotonic() - t0
-        straggled = False
-        if len(self._history) >= self.min_history:
-            med = statistics.median(self._history)
-            straggled = dt > self.deadline_factor * med
-        self._history.append(dt)
-        if len(self._history) > 50:
-            self._history.pop(0)
-        return out, straggled
+
+# Short jittered backoff between step replays: long enough to ride out a
+# transient device hiccup, de-synchronized so replaying workers do not
+# re-collide, short enough to be invisible in the tests.
+_STEP_BACKOFF = Backoff(base_s=0.002, max_s=0.05, jitter_frac=0.5)
+
+
+class StepGuard(StragglerGuard):
+    """Trailing-median straggler deadline for training steps (the
+    historical name for `guard.fallback.StragglerGuard`)."""
 
 
 def retry_step(step_fn: Callable[[Any, Any], Any], state: Any, batch: Any,
@@ -56,17 +49,15 @@ def retry_step(step_fn: Callable[[Any, Any], Any], state: Any, batch: Any,
 
     step_fn is pure (pjit'd), so re-execution from the same inputs is
     bit-exact; `state` is only replaced on success, which is what makes the
-    retry safe (no torn optimizer updates).
+    retry safe (no torn optimizer updates).  Retries ride
+    `guard.fallback.retry_call` — jittered backoff between attempts, every
+    replay counted in the guard health ledger.
     """
-    err: Exception | None = None
-    for attempt in range(max_retries + 1):
-        try:
-            return step_fn(state, batch)
-        except StepFailed as e:          # injected/transient failures only
-            err = e
-            if on_failure:
-                on_failure(attempt, e)
-    raise err
+    from repro.guard.fallback import retry_call
+
+    return retry_call(lambda: step_fn(state, batch),
+                      max_retries=max_retries, retry_on=(StepFailed,),
+                      backoff=_STEP_BACKOFF, on_failure=on_failure)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,61 @@
+"""Guarded execution: fault injection, validation, fallback, telemetry.
+
+The robustness floor under the plan→tune→serve path.  Four modules:
+
+  * `faults` — deterministic seedable fault injection behind the
+    thread-local `fault_scope()` context (mirrors `mm_config()`);
+  * `validate` — pre-dispatch plan re-costing against the AMP budget
+    plus the NaN/Inf output scrub;
+  * `fallback` — the typed `GuardError` hierarchy, retry/backoff
+    primitives, and the one-way degradation ladder
+    tuned → modeled → conservative k_inner → XLA reference;
+  * `health` — process-wide counters surfaced through bench provenance.
+
+`reset()` returns the process to a clean slate (ladders un-tripped,
+counters zeroed) — tests and the `guard` bench suite only.
+"""
+
+from repro.guard import health
+from repro.guard.fallback import (
+    LEVELS,
+    Backoff,
+    CacheFault,
+    GuardError,
+    Ladder,
+    NumericFault,
+    PlanValidationError,
+    StragglerGuard,
+    TransientFault,
+    ladder,
+    reset_ladders,
+    retry_call,
+)
+from repro.guard.faults import FAULT_KINDS, FaultSpec, fault_scope
+from repro.guard.validate import engaged
+
+__all__ = [
+    "LEVELS",
+    "FAULT_KINDS",
+    "Backoff",
+    "CacheFault",
+    "FaultSpec",
+    "GuardError",
+    "Ladder",
+    "NumericFault",
+    "PlanValidationError",
+    "StragglerGuard",
+    "TransientFault",
+    "engaged",
+    "fault_scope",
+    "health",
+    "ladder",
+    "reset",
+    "reset_ladders",
+    "retry_call",
+]
+
+
+def reset() -> None:
+    """Clean slate: un-trip every ladder and zero every counter."""
+    reset_ladders()
+    health.reset()

@@ -1,0 +1,74 @@
+"""Process-wide health telemetry for guarded execution.
+
+A tiny thread-safe counter registry — the observability half of the
+guard subsystem.  Every layer that injects, catches or degrades reports
+here, and two consumers read it back:
+
+  * bench provenance — `provenance_fields()` is attached to every
+    benchmark record produced while any counter is non-zero, so a
+    committed `BENCH_*.json` shows whether its numbers were taken on a
+    degraded process (and the `guard` suite gates the counters in CI);
+  * the serving/ops layer — `snapshot()` for log lines and assertions.
+
+Counters (monotonic within a process, `reset()` is test/suite-only):
+
+  faults_injected / faults_caught   the chaos ledger; equal counts mean
+                                    every injected fault was neutralized
+  injected_<kind>                   per-kind breakdown of the above
+  retries                           transient-fault re-executions
+  scrubbed_batches                  decode batches re-run on the
+                                    reference backend after a NaN scrub
+  plans_rejected                    pre-dispatch validation failures
+  fallbacks                         degradation-ladder trips
+  fallback_level                    gauge: the deepest ladder floor
+                                    reached (index into fallback.LEVELS)
+"""
+
+from __future__ import annotations
+
+import threading
+
+_LOCK = threading.Lock()
+_COUNTS: dict[str, int] = {}
+
+
+def record(name: str, n: int = 1) -> None:
+    """Add `n` to counter `name` (creating it at zero)."""
+    with _LOCK:
+        _COUNTS[name] = _COUNTS.get(name, 0) + int(n)
+
+
+def set_gauge(name: str, value: int) -> None:
+    """Set gauge `name` to `value` if it exceeds the current reading.
+
+    Gauges are high-water marks (the ladder only descends), so a stale
+    writer can never roll one back.
+    """
+    with _LOCK:
+        if int(value) > _COUNTS.get(name, 0):
+            _COUNTS[name] = int(value)
+
+
+def get(name: str) -> int:
+    with _LOCK:
+        return _COUNTS.get(name, 0)
+
+
+def snapshot() -> dict[str, int]:
+    """All non-zero counters, sorted by name (a stable dict copy)."""
+    with _LOCK:
+        return {k: v for k, v in sorted(_COUNTS.items()) if v}
+
+
+def reset() -> None:
+    """Zero every counter.  Tests and the `guard` bench suite only —
+    production consumers treat the counters as monotonic."""
+    with _LOCK:
+        _COUNTS.clear()
+
+
+def provenance_fields() -> dict[str, int] | None:
+    """The counters as a bench-provenance fragment, or None when the
+    process is clean (so ordinary benchmark documents stay unchanged)."""
+    snap = snapshot()
+    return snap or None

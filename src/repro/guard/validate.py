@@ -1,0 +1,152 @@
+"""Pre-dispatch plan validation and the non-finite output scrub.
+
+Every plan a guarded dispatch is about to run — tuned, modeled or
+cached — is re-costed here against the resolved chip's AMP budget
+(`amp * vmem_bytes`, the same arithmetic the planners search under) and
+rejected with a typed `PlanValidationError` when it no longer fits.
+The planners' minimum-granule fail-over plan is always admitted: it is
+the floor Poplar-style failover stands on, so rejecting it would leave
+tiny-AMP configurations with no kernel at all.
+
+`scrub` is the numeric gate: a guarded kernel's output is checked for
+NaN/Inf before anyone downstream can consume it.  Eager outputs raise
+`NumericFault` (the ladder's cue to degrade); outputs still being
+traced under `jax.jit` cannot branch on their values, so with a fault
+scope active the scrub compiles to a `jnp.where` that substitutes the
+jnp-oracle result — zero silent escapes either way.  Without a fault
+scope the traced path is left untouched (the substitution would double
+every matmul's FLOPs inside jitted models).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hw
+from repro.core.costmodel import BlockPlan, MatmulDims
+from repro.guard import faults, health
+from repro.guard.fallback import (
+    CacheFault,
+    NumericFault,
+    PlanValidationError,
+    max_floor,
+)
+from repro.sparse.costmodel import sparse_vmem_bytes
+from repro.sparse.layout import LayoutSummary
+
+
+def engaged() -> bool:
+    """Is any guard machinery live (fault scope armed or ladder tripped)?
+
+    When False, every guard hook is a no-op and dispatch behavior is
+    byte-identical to the unguarded path.
+    """
+    return faults.active() is not None or max_floor() > 0
+
+
+def budget_for(amp: float, chip: hw.ChipSpec, site: str) -> tuple[int, bool]:
+    """The validation byte budget, possibly squeezed by amp_overflow.
+
+    Returns (effective budget, squeezed?).
+    """
+    return faults.squeeze_budget(int(amp * chip.vmem_bytes), site)
+
+
+def _reject(need: int, budget: int, real_budget: int, squeezed: bool,
+            what: str) -> None:
+    """Raise the typed rejection, ledgering an amp_overflow injection
+    only when the squeeze flipped the decision (a squeeze the plan
+    survives is not a fault)."""
+    health.record("plans_rejected")
+    injected = squeezed and need <= real_budget
+    if injected:
+        health.record("faults_injected")
+        health.record("injected_amp_overflow")
+    raise PlanValidationError(
+        f"{what}: working set {need} B exceeds AMP budget {budget} B",
+        injected=injected)
+
+
+def _check_corrupt(plan: BlockPlan, what: str) -> None:
+    if faults.is_corrupt_plan(plan):
+        e = CacheFault(f"{what}: corrupt tuned-cache plan "
+                       f"({plan.bm}x{plan.bk}x{plan.bn})", injected=True)
+        raise e
+
+
+def validate_dense(plan: BlockPlan, m: int, k: int, n: int, *,
+                   batch: int = 1, dtype_bytes: int, amp: float,
+                   chip: hw.ChipSpec, site: str = "dense") -> None:
+    """Re-cost a dense plan against the AMP budget; raise on overflow."""
+    _check_corrupt(plan, site)
+    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+    if plan.bm <= sub and plan.bk <= lane and plan.bn <= lane:
+        return  # the minimum-granule fail-over floor is always admitted
+    d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
+    budget, squeezed = budget_for(amp, chip, site)
+    need = plan.vmem_bytes(d)
+    if need > budget:
+        _reject(need, budget, int(amp * chip.vmem_bytes), squeezed,
+                f"{site} plan {plan.schedule}/{plan.bm}x{plan.bk}x{plan.bn}")
+
+
+def validate_sparse(plan: BlockPlan, summary: LayoutSummary, n: int, *,
+                    dtype_bytes: int, amp: float, chip: hw.ChipSpec,
+                    site: str = "sparse") -> None:
+    """Re-cost a block-sparse plan (index tables included) likewise."""
+    _check_corrupt(plan, site)
+    if plan.bn <= chip.mxu_lanes:
+        return  # minimum-granule rhs block: the fail-over floor
+    budget, squeezed = budget_for(amp, chip, site)
+    need = sparse_vmem_bytes(summary, plan, dtype_bytes)
+    if need > budget:
+        _reject(need, budget, int(amp * chip.vmem_bytes), squeezed,
+                f"{site} plan {plan.schedule}/bn{plan.bn}")
+
+
+def validate_grouped(plan: BlockPlan, groups: int, m: int, k: int, *,
+                     dtype_bytes: int, amp: float, chip: hw.ChipSpec,
+                     site: str = "grouped") -> None:
+    """Re-cost a grouped (block-diagonal) plan likewise."""
+    _check_corrupt(plan, site)
+    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+    if plan.bm <= sub and plan.bk <= lane and plan.bn <= lane:
+        return
+    summary = LayoutSummary.block_diag(groups, m, k, (plan.bm, plan.bk))
+    budget, squeezed = budget_for(amp, chip, site)
+    need = sparse_vmem_bytes(summary, plan, dtype_bytes)
+    if need > budget:
+        _reject(need, budget, int(amp * chip.vmem_bytes), squeezed,
+                f"{site} plan {plan.bm}x{plan.bk}x{plan.bn}")
+
+
+# ------------------------------------------------------------------ scrub
+def scrub(out: jax.Array, site: str, *, injected: int = 0,
+          ref_fn=None) -> jax.Array:
+    """Gate a kernel output on finiteness before anyone consumes it.
+
+    Eager (concrete) outputs: a NaN/Inf raises `NumericFault` — the
+    injected count is ledgered as caught here, at detection.  Traced
+    outputs with a fault scope active: substitute the oracle via
+    `jnp.where` (value-level branching is unavailable at trace time).
+    Traced outputs with no scope pass through untouched.
+    """
+    if isinstance(out, jax.core.Tracer):
+        if faults.active() is None or ref_fn is None:
+            return out
+        if injected:
+            health.record("faults_caught", injected)
+            health.record("scrub_substituted")
+        ok = jnp.isfinite(out).all()
+        return jnp.where(ok, out, ref_fn().astype(out.dtype))
+    if not engaged():
+        return out
+    if bool(jnp.isfinite(out).all()):
+        return out
+    if injected:
+        health.record("faults_caught", injected)
+    e = NumericFault(f"non-finite kernel output at {site}",
+                     injected=bool(injected))
+    e._counted = True  # ledgered above at detection, not per-handler
+    raise e

@@ -9,6 +9,15 @@ fallback-plans against GC200's SRAM budget, not the TPU default.
 
 The matmul wrappers accept a structured `Epilogue` (with operands attached)
 or the legacy ``epilogue="bias_gelu", bias=...`` string surface.
+
+Every matmul dispatch is *guarded* (repro.guard): auto-planned calls walk
+the degradation ladder tuned → modeled → conservative k_inner → jnp
+reference, each level pre-validating its plan against the AMP budget and
+scrubbing the kernel output for NaN/Inf; explicitly-planned calls (the
+`skewmm.matmul` fast path) run the same transient-retry + scrub envelope
+and fall back to the reference oracle on a caught `GuardError`.  With no
+`fault_scope()` armed and no ladder tripped, every hook no-ops and the
+dispatch is behaviorally identical to the unguarded wrappers.
 """
 
 from __future__ import annotations
@@ -18,14 +27,18 @@ import jax.numpy as jnp
 
 from repro.core import config, skewmm as _skewmm
 from repro.core.costmodel import BlockPlan
-from repro.core.epilogue import Epilogue, apply_spec
+from repro.core.epilogue import Epilogue
 from repro.core.planner import plan_matmul
+from repro.guard import fallback as _guard
+from repro.guard import validate as _validate
 from repro.kernels import flash_attention as _fa
+from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rglru
 from repro.kernels import skew_matmul as _mm
 from repro.kernels import ssd_scan as _ssd
 from repro.sparse import kernels as _sparse_mm
-from repro.sparse.costmodel import SparseMatmulCost
+from repro.sparse.costmodel import SparseMatmulCost, cost_sparse_matmul
+from repro.sparse.layout import LayoutSummary
 from repro.sparse.planner import plan_grouped_matmul, plan_sparse_matmul
 
 
@@ -41,6 +54,38 @@ def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
     if any(p for _, p in pads):
         return jnp.pad(x, pads)
     return x
+
+
+def _preferred(cfg: config.MatmulConfig) -> str:
+    """The ladder level the resolved plan_mode asks for."""
+    return "tuned" if cfg.plan_mode == "tuned" else "modeled"
+
+
+def _level_mode(level: str, cfg: config.MatmulConfig) -> str:
+    """Planner mode for a ladder level ("modeled" keeps the ambient
+    modeled mode; a tuned preference degrades to skew_aware)."""
+    if level == "tuned":
+        return "tuned"
+    return cfg.plan_mode if cfg.plan_mode != "tuned" else "skew_aware"
+
+
+def _conservative_plan(chip) -> BlockPlan:
+    """The ladder's conservative rung: the minimum-granule K-inner plan
+    (always budget-admissible — the same floor the planners fail over
+    to)."""
+    return BlockPlan(chip.mxu_sublanes, chip.mxu_lanes, chip.mxu_lanes,
+                     schedule="k_inner")
+
+
+def _run_guarded_explicit(site, run, ref_fn):
+    """Guard envelope for an explicitly-planned call: transient retry +
+    scrub, degrading straight to the reference oracle on a caught
+    `GuardError` (an explicit plan has no ladder of alternatives)."""
+    try:
+        return _guard.guarded_kernel(run, site, ref_fn)
+    except _guard.GuardError as e:
+        _guard.count_caught(e)
+        return ref_fn()
 
 
 def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
@@ -62,23 +107,43 @@ def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
     _, n = b.shape
     cfg = config.resolve(amp=amp, chip=chip, interpret=interpret)
     ep = Epilogue.parse(epilogue, bias=bias, residual=residual)
-    if plan is None:
-        dtype_bytes = jnp.dtype(a.dtype).itemsize
-        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
-                           chip=cfg.chip_spec).plan
-    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
-    bm = min(plan.bm, -(-m // 8) * 8)
-    bk = min(plan.bk, -(-k // 128) * 128)
-    bn = min(plan.bn, -(-n // 128) * 128)
-    ap = _pad_to(a, (bm, bk))
-    bp = _pad_to(b, (bk, bn))
-    biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
-    resp = None if ep.residual is None else _pad_to(ep.residual, (bm, bn))
-    out = _mm.skew_matmul_padded(ap, bp, biasp, resp, bm=bm, bk=bk, bn=bn,
-                                 schedule=plan.schedule, epilogue=ep.spec,
-                                 out_dtype=out_dtype or a.dtype,
-                                 interpret=interpret)
-    return out[:m, :n]
+    odt = out_dtype or a.dtype
+    itp = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
+
+    def run(p: BlockPlan) -> jax.Array:
+        bm = min(p.bm, -(-m // 8) * 8)
+        bk = min(p.bk, -(-k // 128) * 128)
+        bn = min(p.bn, -(-n // 128) * 128)
+        ap = _pad_to(a, (bm, bk))
+        bp = _pad_to(b, (bk, bn))
+        biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
+        resp = None if ep.residual is None else _pad_to(ep.residual, (bm, bn))
+        out = _mm.skew_matmul_padded(ap, bp, biasp, resp, bm=bm, bk=bk, bn=bn,
+                                     schedule=p.schedule, epilogue=ep.spec,
+                                     out_dtype=odt, interpret=itp)
+        return out[:m, :n]
+
+    def ref_fn() -> jax.Array:
+        return _ref.matmul_epilogue_ref(a, b, epilogue=ep, out_dtype=odt)
+
+    if plan is not None:
+        return _run_guarded_explicit("dense", lambda: run(plan), ref_fn)
+
+    dtype_bytes = jnp.dtype(a.dtype).itemsize
+
+    def plan_for(level: str) -> BlockPlan:
+        if level == "conservative":
+            return _conservative_plan(cfg.chip_spec)
+        return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                           chip=cfg.chip_spec,
+                           mode=_level_mode(level, cfg)).plan
+
+    def validate_plan(p: BlockPlan, level: str) -> None:
+        _validate.validate_dense(p, m, k, n, dtype_bytes=dtype_bytes,
+                                 amp=cfg.amp, chip=cfg.chip_spec)
+
+    return _guard.run_laddered("dense", _preferred(cfg), plan_for,
+                               validate_plan, lambda p, level: run(p), ref_fn)
 
 
 def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
@@ -97,23 +162,45 @@ def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
     _, n = b.shape
     cfg = config.resolve(amp=amp, chip=chip, interpret=interpret)
     ep = Epilogue.parse(epilogue, bias=bias, residual=residual)
-    if plan is None:
-        dtype_bytes = jnp.dtype(a.dtype).itemsize
-        plan = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
-                           chip=cfg.chip_spec, batch=nb).plan
-    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
-    bm = min(plan.bm, -(-m // 8) * 8)
-    bk = min(plan.bk, -(-k // 128) * 128)
-    bn = min(plan.bn, -(-n // 128) * 128)
-    ap = _pad_to(a, (1, bm, bk))
-    bp = _pad_to(b, (bk, bn))
-    biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
-    resp = None if ep.residual is None else _pad_to(ep.residual, (1, bm, bn))
-    out = _mm.skew_matmul_batched_padded(ap, bp, biasp, resp, bm=bm, bk=bk,
-                                         bn=bn, epilogue=ep.spec,
-                                         out_dtype=out_dtype or a.dtype,
-                                         interpret=interpret)
-    return out[:, :m, :n]
+    odt = out_dtype or a.dtype
+    itp = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
+
+    def run(p: BlockPlan) -> jax.Array:
+        bm = min(p.bm, -(-m // 8) * 8)
+        bk = min(p.bk, -(-k // 128) * 128)
+        bn = min(p.bn, -(-n // 128) * 128)
+        ap = _pad_to(a, (1, bm, bk))
+        bp = _pad_to(b, (bk, bn))
+        biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
+        resp = (None if ep.residual is None
+                else _pad_to(ep.residual, (1, bm, bn)))
+        out = _mm.skew_matmul_batched_padded(ap, bp, biasp, resp, bm=bm,
+                                             bk=bk, bn=bn, epilogue=ep.spec,
+                                             out_dtype=odt, interpret=itp)
+        return out[:, :m, :n]
+
+    def ref_fn() -> jax.Array:
+        return _ref.matmul_epilogue_ref(a, b, epilogue=ep, out_dtype=odt)
+
+    if plan is not None:
+        return _run_guarded_explicit("dense", lambda: run(plan), ref_fn)
+
+    dtype_bytes = jnp.dtype(a.dtype).itemsize
+
+    def plan_for(level: str) -> BlockPlan:
+        if level == "conservative":
+            return _conservative_plan(cfg.chip_spec)
+        return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                           chip=cfg.chip_spec, batch=nb,
+                           mode=_level_mode(level, cfg)).plan
+
+    def validate_plan(p: BlockPlan, level: str) -> None:
+        _validate.validate_dense(p, m, k, n, batch=nb,
+                                 dtype_bytes=dtype_bytes, amp=cfg.amp,
+                                 chip=cfg.chip_spec)
+
+    return _guard.run_laddered("dense", _preferred(cfg), plan_for,
+                               validate_plan, lambda p, level: run(p), ref_fn)
 
 
 def sparse_matmul(a: jax.Array, b: jax.Array, layout, *,
@@ -140,30 +227,57 @@ def sparse_matmul(a: jax.Array, b: jax.Array, layout, *,
     cfg = config.resolve(amp=amp, chip=chip, interpret=interpret)
     ep = Epilogue.parse(epilogue, bias=bias, residual=residual)
     bm, bk = layout.block_shape
-    if plan is None:
-        dtype_bytes = jnp.dtype(a.dtype).itemsize
-        cost = plan_sparse_matmul(layout, n, dtype_bytes=dtype_bytes,
-                                  amp=cfg.amp, chip=cfg.chip_spec)
-        _skewmm.record_plan(cost)
-        plan = cost.plan
-    elif isinstance(plan, SparseMatmulCost):
-        plan = plan.plan
-    if (plan.bm, plan.bk) != (bm, bk):
-        raise ValueError(
-            f"plan blocks ({plan.bm}, {plan.bk}) must match the layout "
-            f"block shape ({bm}, {bk})")
-    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
-    bn = min(plan.bn, -(-n // 128) * 128)
-    ap = _pad_to(a, (bm, bk))
-    bp = _pad_to(b, (bk, bn))
-    biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
-    resp = None if ep.residual is None else _pad_to(ep.residual, (bm, bn))
+    odt = out_dtype or a.dtype
+    itp = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
     cols, nnz = layout.device_arrays()
-    out = _sparse_mm.block_sparse_matmul_padded(
-        cols, nnz, ap, bp, biasp, resp, bm=bm, bk=bk, bn=bn,
-        schedule=plan.schedule, epilogue=ep.spec,
-        out_dtype=out_dtype or a.dtype, interpret=interpret)
-    return out[:m, :n]
+
+    def run(p: BlockPlan) -> jax.Array:
+        bn = min(p.bn, -(-n // 128) * 128)
+        ap = _pad_to(a, (bm, bk))
+        bp = _pad_to(b, (bk, bn))
+        biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
+        resp = None if ep.residual is None else _pad_to(ep.residual, (bm, bn))
+        out = _sparse_mm.block_sparse_matmul_padded(
+            cols, nnz, ap, bp, biasp, resp, bm=bm, bk=bk, bn=bn,
+            schedule=p.schedule, epilogue=ep.spec, out_dtype=odt,
+            interpret=itp)
+        return out[:m, :n]
+
+    def ref_fn() -> jax.Array:
+        return _ref.block_sparse_matmul_ref(a, b, layout, epilogue=ep,
+                                            out_dtype=odt)
+
+    if plan is not None:
+        if isinstance(plan, SparseMatmulCost):
+            plan = plan.plan
+        if (plan.bm, plan.bk) != (bm, bk):
+            raise ValueError(
+                f"plan blocks ({plan.bm}, {plan.bk}) must match the layout "
+                f"block shape ({bm}, {bk})")
+        return _run_guarded_explicit("sparse", lambda: run(plan), ref_fn)
+
+    dtype_bytes = jnp.dtype(a.dtype).itemsize
+    summary = layout.summary()
+
+    def plan_for(level: str) -> BlockPlan:
+        if level == "conservative":
+            p = BlockPlan(bm, bk, cfg.chip_spec.mxu_lanes,
+                          schedule="k_inner")
+            _skewmm.record_plan(cost_sparse_matmul(
+                summary, n, p, cfg.chip_spec, dtype_bytes=dtype_bytes))
+            return p
+        cost = plan_sparse_matmul(summary, n, dtype_bytes=dtype_bytes,
+                                  amp=cfg.amp, chip=cfg.chip_spec,
+                                  mode=_level_mode(level, cfg))
+        _skewmm.record_plan(cost)
+        return cost.plan
+
+    def validate_plan(p: BlockPlan, level: str) -> None:
+        _validate.validate_sparse(p, summary, n, dtype_bytes=dtype_bytes,
+                                  amp=cfg.amp, chip=cfg.chip_spec)
+
+    return _guard.run_laddered("sparse", _preferred(cfg), plan_for,
+                               validate_plan, lambda p, level: run(p), ref_fn)
 
 
 def grouped_matmul(a: jax.Array, b: jax.Array, *,
@@ -180,7 +294,8 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *,
     into `plan_capture()` (schedule/blocks provenance); the compute
     backend follows the resolved `MatmulConfig` — "pallas" runs the
     grouped kernel, "xla" (the default) keeps the `jnp.einsum` fallback
-    with identical fp32-accumulator + epilogue numerics.
+    with identical fp32-accumulator + epilogue numerics (it doubles as
+    the guard ladder's reference rung).
     """
     g, m, k = a.shape
     g2, k2, n = b.shape
@@ -192,31 +307,59 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *,
     if ep.bias is not None:
         raise ValueError("grouped_matmul epilogue supports scale / act / "
                          "residual; bias is not plumbed per-group")
-    if plan is None:
-        dtype_bytes = jnp.dtype(a.dtype).itemsize
-        cost = plan_grouped_matmul(g, m, k, n, dtype_bytes=dtype_bytes,
-                                   amp=cfg.amp, chip=cfg.chip_spec)
-        _skewmm.record_plan(cost)
-        plan = cost.plan
-    elif isinstance(plan, SparseMatmulCost):
-        plan = plan.plan
-    out_dtype = out_dtype or a.dtype
+    odt = out_dtype or a.dtype
+    dtype_bytes = jnp.dtype(a.dtype).itemsize
+
+    def ref_fn() -> jax.Array:
+        return _ref.grouped_matmul_ref(a, b, epilogue=ep, out_dtype=odt)
+
     if cfg.backend != "pallas":
-        z = jnp.einsum("gmk,gkn->gmn", a, b,
-                       preferred_element_type=jnp.float32)
-        z = apply_spec(z, ep.spec, ep.operands())
-        return z.astype(out_dtype)
-    interpret = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
-    bm = min(plan.bm, -(-m // 8) * 8)
-    bk = min(plan.bk, -(-k // 128) * 128)
-    bn = min(plan.bn, -(-n // 128) * 128)
-    ap = _pad_to(a, (1, bm, bk))
-    bp = _pad_to(b, (1, bk, bn))
-    resp = None if ep.residual is None else _pad_to(ep.residual, (1, bm, bn))
-    out = _sparse_mm.grouped_matmul_padded(
-        ap, bp, resp, bm=bm, bk=bk, bn=bn, epilogue=ep.spec,
-        out_dtype=out_dtype, interpret=interpret)
-    return out[:, :m, :n]
+        if plan is None:
+            cost = plan_grouped_matmul(g, m, k, n, dtype_bytes=dtype_bytes,
+                                       amp=cfg.amp, chip=cfg.chip_spec)
+            _skewmm.record_plan(cost)
+        return ref_fn()
+
+    itp = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
+
+    def run(p: BlockPlan) -> jax.Array:
+        bm = min(p.bm, -(-m // 8) * 8)
+        bk = min(p.bk, -(-k // 128) * 128)
+        bn = min(p.bn, -(-n // 128) * 128)
+        ap = _pad_to(a, (1, bm, bk))
+        bp = _pad_to(b, (1, bk, bn))
+        resp = (None if ep.residual is None
+                else _pad_to(ep.residual, (1, bm, bn)))
+        out = _sparse_mm.grouped_matmul_padded(
+            ap, bp, resp, bm=bm, bk=bk, bn=bn, epilogue=ep.spec,
+            out_dtype=odt, interpret=itp)
+        return out[:, :m, :n]
+
+    if plan is not None:
+        if isinstance(plan, SparseMatmulCost):
+            plan = plan.plan
+        return _run_guarded_explicit("grouped", lambda: run(plan), ref_fn)
+
+    def plan_for(level: str) -> BlockPlan:
+        if level == "conservative":
+            chip_spec = cfg.chip_spec
+            p = _conservative_plan(chip_spec)
+            summary = LayoutSummary.block_diag(g, m, k, (p.bm, p.bk))
+            _skewmm.record_plan(cost_sparse_matmul(
+                summary, n, p, chip_spec, dtype_bytes=dtype_bytes))
+            return p
+        cost = plan_grouped_matmul(g, m, k, n, dtype_bytes=dtype_bytes,
+                                   amp=cfg.amp, chip=cfg.chip_spec,
+                                   mode=_level_mode(level, cfg))
+        _skewmm.record_plan(cost)
+        return cost.plan
+
+    def validate_plan(p: BlockPlan, level: str) -> None:
+        _validate.validate_grouped(p, g, m, k, dtype_bytes=dtype_bytes,
+                                   amp=cfg.amp, chip=cfg.chip_spec)
+
+    return _guard.run_laddered("grouped", _preferred(cfg), plan_for,
+                               validate_plan, lambda p, level: run(p), ref_fn)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,

@@ -305,3 +305,43 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
         h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = transformer.unembed(params, cfg, h[:, 0])
         return logits, new_cache
+
+
+def guarded_decode_step(params, cfg: ModelConfig, cache, tokens, pos,
+                        mm: mmcfg.MatmulConfig | None = None):
+    """`decode_step` with a serving-boundary NaN scrub.
+
+    Decode is where a poisoned kernel is most damaging — one non-finite
+    logit silently corrupts every subsequent sampled token.  This wrapper
+    adds the last net of the guard ladder: a *concrete* finiteness check
+    on the logits (it synchronizes, so it belongs at the serving boundary,
+    not inside a jitted loop — do not jit this function; jit the model
+    step it wraps), and on failure a re-run of the whole step on the XLA
+    reference backend, which bypasses the pallas kernels entirely.  The
+    logits are themselves a `fault_scope` injection site ("decode") so the
+    scrub path is exercisable end to end; the reference re-run is outside
+    the injection, mirroring how a real backend-specific corruption would
+    not follow the computation to XLA.  Scrubs are counted in guard
+    health ("scrubbed_batches"); a step whose *reference* re-run still
+    produces non-finite logits raises `NumericFault` (genuinely bad
+    params/inputs — no backend can fix that, and returning it would be a
+    silent escape).
+    """
+    from repro.guard import faults as _faults
+    from repro.guard import health as _health
+    from repro.guard.fallback import NumericFault
+
+    logits, new_cache = decode_step(params, cfg, cache, tokens, pos, mm)
+    logits, injected = _faults.maybe_poison(logits, "decode")
+    if bool(jnp.isfinite(logits).all()):
+        return logits, new_cache
+    if injected:
+        _health.record("faults_caught", injected)
+    _health.record("scrubbed_batches")
+    with mmcfg.scope(mm), mmcfg.mm_config(backend="xla"):
+        logits, new_cache = decode_step(params, cfg, cache, tokens, pos)
+    if not bool(jnp.isfinite(logits).all()):
+        raise NumericFault(
+            "decode_step logits non-finite even on the XLA reference "
+            "backend")
+    return logits, new_cache

@@ -99,11 +99,16 @@ def _plan_sparse_tuned(
     amp: float,
     chip: hw.ChipSpec,
 ) -> SparseMatmulCost:
+    from repro.guard import faults as guard_faults  # planner <- guard cycle
+    from repro.guard import health as guard_health
     from repro.tune import runtime as tune_runtime  # planner <- tune cycle
 
     plan = tune_runtime.lookup_sparse(
         summary, n, dtype_bytes=dtype_bytes, amp=amp, chip=chip
     )
+    if guard_faults.is_corrupt_plan(plan):
+        guard_health.record("faults_caught")
+        plan = None
     if (
         plan is not None
         and (plan.bm, plan.bk) == (summary.bm, summary.bk)
@@ -257,11 +262,16 @@ def _plan_grouped_tuned(
     amp: float,
     chip: hw.ChipSpec,
 ) -> SparseMatmulCost:
+    from repro.guard import faults as guard_faults  # planner <- guard cycle
+    from repro.guard import health as guard_health
     from repro.tune import runtime as tune_runtime  # planner <- tune cycle
 
     plan = tune_runtime.lookup_grouped(
         groups, m, k, n, dtype_bytes=dtype_bytes, amp=amp, chip=chip
     )
+    if guard_faults.is_corrupt_plan(plan):
+        guard_health.record("faults_caught")
+        plan = None
     if plan is not None:
         summary = LayoutSummary.block_diag(groups, m, k, (plan.bm, plan.bk))
         budget = int(amp * chip.vmem_bytes)

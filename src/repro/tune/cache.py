@@ -257,3 +257,29 @@ class TuneCache:
         except json.JSONDecodeError as e:
             raise SchemaError(f"{path}: not valid JSON ({e})") from None
         return cls.from_json(doc, source=path)
+
+
+def load_or_quarantine(path: str) -> tuple["TuneCache", str | None]:
+    """Load a cache file, quarantining it on schema/parse failure.
+
+    The graceful-degradation loader the *ambient* default cache uses
+    (`runtime.get_active_cache`): a truncated, non-JSON or stale-schema
+    file is moved aside to ``<path>.corrupt`` (best-effort — a rename
+    failure still degrades, it just leaves the bad file in place so the
+    next process re-reports it) and an empty cache is returned, so every
+    tuned lookup misses and planning falls back to the modeled modes.
+
+    Returns ``(cache, problem)`` — `problem` is None on a clean load,
+    else a human-readable description for the caller's single warning.
+    Explicit loads (`TuneCache.load` / `set_active_cache`) stay loud.
+    """
+    try:
+        return TuneCache.load(path), None
+    except SchemaError as e:
+        quarantine = f"{path}.corrupt"
+        try:
+            os.replace(path, quarantine)
+            problem = f"{e} (quarantined to {quarantine})"
+        except OSError:
+            problem = f"{e} (quarantine to {quarantine} failed)"
+        return TuneCache(), problem

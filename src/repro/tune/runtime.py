@@ -27,14 +27,16 @@ import threading
 import warnings
 from typing import Iterator
 
-from repro.bench.record import SchemaError
 from repro.core import hw
 from repro.core.costmodel import BlockPlan
+from repro.guard import faults as _faults
+from repro.guard import health as _health
 from repro.sparse.layout import LayoutSummary
 from repro.tune.cache import (
     TuneCache,
     dense_key,
     grouped_key,
+    load_or_quarantine,
     sparse_key,
 )
 from repro.tune.shapeclass import ShapeClass
@@ -78,17 +80,18 @@ def get_active_cache() -> TuneCache:
         if not _DEFAULT_LOADED:
             path = default_cache_path()
             if os.path.exists(path):
-                try:
-                    _DEFAULT = TuneCache.load(path)
-                except SchemaError as e:
-                    # The *ambient* default degrades gracefully: a stale
-                    # or truncated on-disk cache must not crash every
-                    # tuned plan — it just stops answering.  Explicit
-                    # loads (set_active_cache / TuneCache.load) stay loud.
+                # The *ambient* default degrades gracefully: a stale or
+                # truncated on-disk cache must not crash every tuned
+                # plan — the bad file is quarantined to <path>.corrupt
+                # and lookups just stop answering.  Explicit loads
+                # (set_active_cache / TuneCache.load) stay loud.
+                _DEFAULT, problem = load_or_quarantine(path)
+                if problem is not None:
+                    _health.record("cache_quarantined")
                     warnings.warn(
-                        f"ignoring unusable tune cache: {e}", stacklevel=2
+                        f"ignoring unusable tune cache: {problem}",
+                        stacklevel=2,
                     )
-                    _DEFAULT = TuneCache()
             else:
                 _DEFAULT = TuneCache()
             _DEFAULT_LOADED = True
@@ -132,7 +135,11 @@ def lookup_dense(
 ) -> BlockPlan | None:
     cls = ShapeClass.of(m, k, n, batch)
     entry = get_active_cache().get(dense_key(chip.name, dtype_bytes, amp, cls))
-    return None if entry is None else entry.plan
+    # cache_corrupt injection point: an armed fault scope can replace the
+    # result (hit or miss — a corrupt cache fabricates entries too) with
+    # the sentinel plan the planners' budget re-check rejects.
+    return _faults.maybe_corrupt_lookup(
+        None if entry is None else entry.plan, "lookup_dense")
 
 
 def lookup_sparse(
@@ -144,7 +151,8 @@ def lookup_sparse(
     chip: hw.ChipSpec,
 ) -> BlockPlan | None:
     entry = get_active_cache().get(sparse_key(chip.name, dtype_bytes, amp, summary, n))
-    return None if entry is None else entry.plan
+    return _faults.maybe_corrupt_lookup(
+        None if entry is None else entry.plan, "lookup_sparse")
 
 
 def lookup_grouped(
@@ -161,4 +169,5 @@ def lookup_grouped(
     entry = get_active_cache().get(
         grouped_key(chip.name, dtype_bytes, amp, groups, cls)
     )
-    return None if entry is None else entry.plan
+    return _faults.maybe_corrupt_lookup(
+        None if entry is None else entry.plan, "lookup_grouped")

@@ -1,0 +1,515 @@
+"""Guard subsystem: fault injection, validation, degradation, health."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import guard
+from repro.bench import timing
+from repro.core import hw
+from repro.core.config import mm_config
+from repro.core.costmodel import BlockPlan
+from repro.guard import fallback, faults, health, validate
+from repro.kernels import ops, ref
+from repro.sparse import BlockSparseLayout
+from repro.tune import runtime as tune_runtime
+from repro.tune.cache import TuneCache, load_or_quarantine
+
+
+@pytest.fixture(autouse=True)
+def _clean_guard_state():
+    guard.reset()
+    yield
+    guard.reset()
+
+
+def _mats(m=96, k=80, n=112, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)) * 0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)) * 0.5, jnp.float32)
+    return a, b
+
+
+# ===================================================================
+# fault_scope semantics
+# ===================================================================
+def test_fault_scope_layering_and_merge():
+    assert faults.active() is None
+    with faults.fault_scope(seed=3, rate=0.5) as outer:
+        assert outer.seed == 3 and outer.rate == 0.5
+        assert outer.kinds == faults.FAULT_KINDS
+        with faults.fault_scope(kinds=("nan_output",)) as inner:
+            # field-wise merge: kinds overridden, seed/rate inherited
+            assert inner.kinds == ("nan_output",)
+            assert inner.seed == 3 and inner.rate == 0.5
+            assert faults.active() is inner
+        assert faults.active() is outer
+    assert faults.active() is None
+
+
+def test_fault_scope_rejects_unknown_fields_and_kinds():
+    with pytest.raises(TypeError, match="unknown fault_scope fields"):
+        with faults.fault_scope(bogus=1):
+            pass
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        with faults.fault_scope(kinds=("not_a_fault",)):
+            pass
+    with pytest.raises(ValueError, match="rate"):
+        with faults.fault_scope(rate=1.5):
+            pass
+
+
+def test_fault_draws_are_deterministic_and_scope_local():
+    def pattern():
+        out = jnp.ones((4, 4), jnp.float32)
+        with faults.fault_scope(kinds=("nan_output",), seed=5, rate=0.4):
+            return [faults.maybe_poison(out, "s")[1] for _ in range(12)]
+
+    first = pattern()
+    # the draw ledger resets per scope: identical spec => identical firing
+    assert pattern() == first
+    assert 0 < sum(first) < 12  # rate 0.4 fires sometimes, not always
+
+
+def test_hooks_noop_without_scope():
+    out = jnp.ones((4, 4), jnp.float32)
+    poisoned, injected = faults.maybe_poison(out, "s")
+    assert injected == 0 and poisoned is out
+    faults.maybe_raise_transient("s")  # must not raise
+    assert faults.squeeze_budget(1000, "s") == (1000, False)
+    assert faults.maybe_corrupt_lookup(None, "s") is None
+    assert faults.outlier_scale("s") is None
+    assert health.snapshot() == {}
+
+
+def test_transient_capped_per_site():
+    with faults.fault_scope(kinds=("transient_raise",), max_transient=2):
+        for _ in range(2):
+            with pytest.raises(fallback.TransientFault):
+                faults.maybe_raise_transient("s")
+        faults.maybe_raise_transient("s")  # cap reached: clean
+        with pytest.raises(fallback.TransientFault):
+            faults.maybe_raise_transient("other_site")
+
+
+# ===================================================================
+# validation
+# ===================================================================
+def test_validate_dense_rejects_oversized_plan():
+    plan = BlockPlan(4096, 4096, 4096, schedule="k_inner")
+    with pytest.raises(fallback.PlanValidationError, match="exceeds AMP"):
+        validate.validate_dense(plan, 4096, 4096, 4096, dtype_bytes=4,
+                                amp=0.45, chip=hw.TPU_V5E)
+    assert health.get("plans_rejected") == 1
+    assert health.get("faults_injected") == 0  # real overflow, not injected
+
+
+def test_validate_admits_min_granule_floor_under_any_budget():
+    chip = hw.TPU_V5E
+    plan = BlockPlan(chip.mxu_sublanes, chip.mxu_lanes, chip.mxu_lanes,
+                     schedule="k_inner")
+    with faults.fault_scope(kinds=("amp_overflow",), amp_squeeze=1e9):
+        validate.validate_dense(plan, 8192, 8192, 8192, dtype_bytes=4,
+                                amp=0.01, chip=chip)
+    assert health.get("plans_rejected") == 0
+
+
+def test_validate_flags_injected_amp_overflow():
+    # A plan that fits the real budget but not the squeezed one: the
+    # rejection is ledgered as an injected fault (decision flipped).
+    plan = BlockPlan(256, 512, 512, schedule="k_inner")
+    with faults.fault_scope(kinds=("amp_overflow",), amp_squeeze=1e6):
+        with pytest.raises(fallback.PlanValidationError) as ei:
+            validate.validate_dense(plan, 1024, 1024, 1024, dtype_bytes=4,
+                                    amp=0.45, chip=hw.TPU_V5E)
+    assert ei.value.injected
+    assert health.get("faults_injected") == 1
+    assert health.get("injected_amp_overflow") == 1
+
+
+def test_validate_rejects_corrupt_plan():
+    with pytest.raises(fallback.CacheFault, match="corrupt"):
+        validate.validate_dense(faults.corrupt_plan(), 64, 64, 64,
+                                dtype_bytes=4, amp=0.45, chip=hw.TPU_V5E)
+    assert faults.is_corrupt_plan(faults.corrupt_plan())
+    assert not faults.is_corrupt_plan(None)
+    assert not faults.is_corrupt_plan(BlockPlan(8, 128, 128))
+
+
+def test_scrub_concrete_raises_and_ledgers_once():
+    bad = jnp.array([[1.0, jnp.nan]], jnp.float32)
+    with faults.fault_scope():
+        with pytest.raises(fallback.NumericFault) as ei:
+            validate.scrub(bad, "s", injected=1)
+    assert ei.value.injected
+    # counted at detection; count_caught must not double-count
+    assert health.get("faults_caught") == 1
+    fallback.count_caught(ei.value)
+    assert health.get("faults_caught") == 1
+
+
+def test_scrub_passthrough_when_disengaged():
+    bad = jnp.array([jnp.inf], jnp.float32)
+    assert validate.scrub(bad, "s") is bad  # no scope, no latch: untouched
+
+
+def test_scrub_substitutes_oracle_under_jit():
+    a, b = _mats(16, 16, 16)
+    want = np.asarray(ref.matmul_ref(a, b))
+
+    @jax.jit
+    def poisoned(a, b):
+        out = jnp.matmul(a, b).at[0, 0].set(jnp.nan)
+        return validate.scrub(out, "s", injected=1,
+                              ref_fn=lambda: ref.matmul_ref(a, b))
+
+    with faults.fault_scope():
+        got = poisoned(a, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+    assert health.get("scrub_substituted") == 1
+
+
+# ===================================================================
+# retry / backoff
+# ===================================================================
+def test_retry_call_recovers_and_counts():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise fallback.TransientFault("blip", injected=True)
+        return "ok"
+
+    assert fallback.retry_call(flaky, max_retries=3, sleep=lambda s: None) == "ok"
+    assert len(calls) == 3
+    assert health.get("retries") == 2
+    assert health.get("faults_caught") == 2
+
+
+def test_retry_call_exhaustion_reraises():
+    def always():
+        raise fallback.TransientFault("down")
+
+    with pytest.raises(fallback.TransientFault):
+        fallback.retry_call(always, max_retries=2, sleep=lambda s: None)
+    assert health.get("retries") == 2  # 3 attempts = 2 re-executions
+
+
+def test_retry_call_does_not_catch_other_errors():
+    def boom():
+        raise ValueError("real bug")
+
+    with pytest.raises(ValueError):
+        fallback.retry_call(boom, sleep=lambda s: None)
+    assert health.get("retries") == 0
+
+
+def test_backoff_deterministic_jitter_within_bounds():
+    bo = fallback.Backoff(base_s=0.01, factor=2.0, max_s=0.05,
+                          jitter_frac=0.5, seed=4)
+    delays = [bo.delay(i) for i in range(6)]
+    assert delays == [bo.delay(i) for i in range(6)]  # replayable
+    for i, d in enumerate(delays):
+        raw = min(0.01 * 2.0 ** i, 0.05)
+        assert raw * 0.5 <= d <= raw * 1.5
+    assert fallback.Backoff(jitter_frac=0.0, base_s=0.01).delay(0) == 0.01
+
+
+# ===================================================================
+# ladder
+# ===================================================================
+def test_ladder_one_way_latch():
+    lad = fallback.ladder("t_site")
+    assert lad.floor == 0 and lad.level == "tuned"
+    assert lad.start("modeled") == 1
+    lad.trip("modeled", "poisoned")
+    assert lad.floor == 2 and lad.level == "conservative"
+    assert lad.start("tuned") == 2  # preference cannot climb the latch
+    lad.trip("tuned", "stale")  # tripping above the floor: no regression
+    assert lad.floor == 2
+    assert fallback.ladder("t_site") is lad
+    assert fallback.max_floor() == 2
+    assert health.get("fallbacks") == 1
+    assert health.get("fallback_level") == 2
+
+
+def test_ladder_reference_is_terminal():
+    lad = fallback.ladder("t_site2")
+    lad.trip("reference", "cannot go lower")
+    assert lad.level == "reference"
+    assert lad.floor == len(fallback.LEVELS) - 1
+
+
+# ===================================================================
+# guarded dispatch end to end
+# ===================================================================
+def test_skew_matmul_full_chaos_matches_oracle():
+    a, b = _mats()
+    want = np.asarray(ref.matmul_ref(a, b))
+    with tune_runtime.use_cache(TuneCache()), mm_config(plan_mode="tuned"), \
+            faults.fault_scope(seed=7):
+        got = ops.skew_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-4)
+    snap = health.snapshot()
+    assert snap["faults_injected"] > 0
+    assert snap["faults_caught"] == snap["faults_injected"]
+    assert fallback.ladder("dense").level == "reference"
+
+
+def test_latch_holds_without_rearming():
+    a, b = _mats()
+    want = np.asarray(ref.matmul_ref(a, b))
+    with faults.fault_scope(seed=7, kinds=("nan_output", "inf_output")):
+        ops.skew_matmul(a, b)
+    assert fallback.ladder("dense").level == "reference"
+    before = health.snapshot()
+    # no scope armed: the latched site must go straight to the oracle
+    # without re-running (and re-failing) the poisoned levels
+    got = ops.skew_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-4)
+    assert health.snapshot() == before
+
+
+def test_skew_matmul_transient_recovers_without_degrading():
+    a, b = _mats()
+    want = np.asarray(ref.matmul_ref(a, b))
+    with faults.fault_scope(seed=11, kinds=("transient_raise",)):
+        got = ops.skew_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-4)
+    assert health.get("retries") == 1
+    assert fallback.max_floor() == 0  # absorbed by retry, no latch
+
+
+def test_sparse_and_grouped_chaos_match_oracle():
+    rng = np.random.default_rng(1)
+    m = k = 128
+    n = 96
+    layout = BlockSparseLayout.dense(m, k, (32, 64))
+    a = jnp.asarray(rng.normal(size=(m, k)) * 0.4, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)) * 0.4, jnp.float32)
+    with faults.fault_scope(seed=13):
+        got = ops.sparse_matmul(a, b, layout)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.matmul_ref(a, b)),
+                               rtol=5e-3, atol=5e-4)
+    ga = jnp.asarray(rng.normal(size=(4, 32, 48)) * 0.4, jnp.float32)
+    gb = jnp.asarray(rng.normal(size=(4, 48, 64)) * 0.4, jnp.float32)
+    with mm_config(backend="pallas"), faults.fault_scope(seed=17):
+        gout = ops.grouped_matmul(ga, gb)
+    np.testing.assert_allclose(np.asarray(gout),
+                               np.asarray(ref.grouped_matmul_ref(ga, gb)),
+                               rtol=5e-3, atol=5e-4)
+    snap = health.snapshot()
+    assert snap["faults_caught"] == snap["faults_injected"] > 0
+
+
+def test_explicit_plan_poison_falls_back_to_oracle():
+    a, b = _mats(64, 64, 64)
+    want = np.asarray(ref.matmul_ref(a, b))
+    plan = BlockPlan(32, 64, 64, schedule="k_inner")
+    with faults.fault_scope(seed=5, kinds=("nan_output",)):
+        got = ops.skew_matmul(a, b, plan=plan)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-4)
+    snap = health.snapshot()
+    assert snap["faults_caught"] == snap["faults_injected"] == 1
+
+
+def test_corrupt_cache_entry_is_caught_at_plan_time():
+    a, b = _mats()
+    want = np.asarray(ref.matmul_ref(a, b))
+    with tune_runtime.use_cache(TuneCache()), mm_config(plan_mode="tuned"), \
+            faults.fault_scope(seed=3, kinds=("cache_corrupt",)):
+        got = ops.skew_matmul(a, b)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-3, atol=5e-4)
+    snap = health.snapshot()
+    assert snap["injected_cache_corrupt"] >= 1
+    assert snap["faults_caught"] == snap["faults_injected"]
+    assert fallback.max_floor() == 0  # absorbed inside the planner
+
+
+# ===================================================================
+# timing: MAD outlier rejection (S2)
+# ===================================================================
+def test_reject_outliers_one_sided():
+    base = [100.0, 101.0, 99.0, 100.5, 100.2, 98.9, 100.1]
+    kept = timing.reject_outliers(base + [5000.0])
+    assert kept == list(range(7))
+    # fast samples are information, not noise: never rejected
+    kept = timing.reject_outliers(base + [1.0])
+    assert len(kept) == 8
+    # too few samples for a meaningful MAD: keep everything
+    assert timing.reject_outliers([1.0, 500.0, 2.0]) == [0, 1, 2]
+
+
+def test_measure_rejects_injected_outliers():
+    fn = jax.jit(lambda x: x * 2.0)
+    x = jnp.ones((64,), jnp.float32)
+    # seed 0 / rate 0.25: deterministically fires on repeats 1 and 5 of 8
+    with faults.fault_scope(seed=0, kinds=("tuner_outlier",), rate=0.25,
+                            outlier_x=1000.0):
+        t = timing.measure(fn, x, iters=2, repeats=8)
+    # both inflated repeats must be rejected (x1000 clears any MAD cutoff);
+    # a naturally-slow clean repeat may legitimately be rejected too
+    assert t.outliers >= 2
+    assert health.get("injected_tuner_outlier") == 2
+    assert health.get("faults_caught") == health.get("faults_injected") == 2
+    assert t.median_us < 1e5  # the inflated repeats did not skew the median
+
+
+def test_measure_reports_zero_outliers_when_clean():
+    fn = jax.jit(lambda x: x + 1.0)
+    t = timing.measure(fn, jnp.ones((8,)), iters=1, repeats=2)
+    assert t.outliers == 0 and t.repeats == 2
+
+
+# ===================================================================
+# tune-cache quarantine (S1)
+# ===================================================================
+def test_load_or_quarantine_truncated_file(tmp_path):
+    path = str(tmp_path / "tune_cache.json")
+    with open(path, "w") as fh:
+        fh.write('{"schema_version": 1, "entr')  # truncated write
+    cache, problem = load_or_quarantine(path)
+    assert cache.entries == {}
+    assert problem is not None and "quarantined" in problem
+    assert not os.path.exists(path)
+    assert os.path.exists(path + ".corrupt")
+
+
+def test_load_or_quarantine_stale_schema(tmp_path):
+    path = str(tmp_path / "tune_cache.json")
+    with open(path, "w") as fh:
+        json.dump({"schema_version": 999, "entries": {}}, fh)
+    cache, problem = load_or_quarantine(path)
+    assert cache.entries == {} and "schema_version" in problem
+    assert os.path.exists(path + ".corrupt")
+
+
+def test_load_or_quarantine_clean_file(tmp_path):
+    path = str(tmp_path / "tune_cache.json")
+    TuneCache().save(path)
+    cache, problem = load_or_quarantine(path)
+    assert problem is None
+    assert os.path.exists(path) and not os.path.exists(path + ".corrupt")
+
+
+def test_ambient_default_cache_quarantines_and_degrades(
+        tmp_path, monkeypatch):
+    path = str(tmp_path / "tune_cache.json")
+    with open(path, "w") as fh:
+        fh.write("not json at all")
+    monkeypatch.setenv(tune_runtime.ENV_CACHE, path)
+    tune_runtime.reset_default_cache()
+    try:
+        with pytest.warns(UserWarning, match="unusable tune cache"):
+            cache = tune_runtime.get_active_cache()
+        assert cache.entries == {}
+        assert os.path.exists(path + ".corrupt")
+        assert health.get("cache_quarantined") == 1
+        # warning fires once: the quarantined load is latched
+        assert tune_runtime.get_active_cache() is cache
+    finally:
+        tune_runtime.reset_default_cache()
+
+
+def test_explicit_cache_load_stays_loud(tmp_path):
+    from repro.bench.record import SchemaError
+
+    path = str(tmp_path / "tune_cache.json")
+    with open(path, "w") as fh:
+        fh.write("{")
+    with pytest.raises(SchemaError):
+        tune_runtime.set_active_cache(path)
+
+
+# ===================================================================
+# serving-boundary decode scrub
+# ===================================================================
+def test_guarded_decode_step_scrubs_poisoned_logits():
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+    from repro.serve import engine
+
+    cfg = get_config("mamba2-2.7b").reduced()
+    bundle = build_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    toks = jnp.zeros((2, 8), jnp.int32)
+    cache, _ = engine.prefill(params, cfg, toks, max_len=16)
+    step = (params, cfg, cache, jnp.zeros((2,), jnp.int32),
+            jnp.asarray(8, jnp.int32))
+    want, _ = engine.decode_step(*step)
+    with faults.fault_scope(seed=5, kinds=("nan_output", "inf_output")):
+        got, _ = engine.guarded_decode_step(*step)
+    assert bool(jnp.isfinite(got).all())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+    assert health.get("scrubbed_batches") == 1
+    snap = health.snapshot()
+    assert snap["faults_caught"] == snap["faults_injected"]
+    # clean scope: no scrub, no re-run
+    clean, _ = engine.guarded_decode_step(*step)
+    assert health.get("scrubbed_batches") == 1
+    np.testing.assert_allclose(np.asarray(clean), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ===================================================================
+# bench provenance surfacing
+# ===================================================================
+def test_provenance_carries_guard_counters_only_when_dirty():
+    from repro.bench.record import BenchResult, Provenance
+
+    clean = Provenance.capture()
+    assert clean.guard is None
+    assert "guard" not in clean.to_json()
+    health.record("faults_injected", 2)
+    dirty = Provenance.capture()
+    assert dirty.guard == {"faults_injected": 2}
+    r = BenchResult(suite="s", name="r", axes={}, metrics={}, info={},
+                    provenance=dirty)
+    back = BenchResult.from_json(json.loads(json.dumps(r.to_json())))
+    assert back.provenance.guard == {"faults_injected": 2}
+
+
+def test_bench_result_outliers_roundtrip_and_default():
+    from repro.bench.record import BenchResult, Provenance
+
+    r = BenchResult(suite="s", name="r", axes={}, metrics={}, info={},
+                    provenance=Provenance.capture(), outliers=3)
+    d = r.to_json()
+    assert d["outliers"] == 3
+    assert BenchResult.from_json(d).outliers == 3
+    del d["outliers"]  # pre-guard documents load with the default
+    assert BenchResult.from_json(d).outliers == 0
+
+
+# ===================================================================
+# distributed fault tolerance rides the guard primitives (S3)
+# ===================================================================
+def test_step_failed_is_a_guard_transient():
+    from repro.distributed.fault_tolerance import StepFailed, StepGuard
+
+    assert issubclass(StepFailed, fallback.TransientFault)
+    assert issubclass(StepFailed, guard.GuardError)
+    assert isinstance(StepGuard(), fallback.StragglerGuard)
+
+
+def test_retry_step_counts_in_health_ledger():
+    from repro.distributed.fault_tolerance import StepFailed, retry_step
+
+    calls = []
+
+    def step(state, batch):
+        calls.append(1)
+        if len(calls) < 2:
+            raise StepFailed("flaky step", injected=True)
+        return state + batch
+
+    assert retry_step(step, 1, 2, max_retries=3) == 3
+    assert health.get("retries") == 1
+    assert health.get("faults_caught") == 1

@@ -7,6 +7,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
+from repro import guard
 from repro.core import hw
 from repro.core.costmodel import BlockPlan
 from repro.core.planner import plan_matmul
@@ -232,3 +233,36 @@ def test_ssd_state_decomposition(b, length, seed):
     y2 = ssd_chunked(x[:, half:], dt[:, half:], a_log, bm[:, half:],
                      cm[:, half:], chunk=16, init_state=st1)
     np.testing.assert_allclose(y2, y_full[:, half:], rtol=2e-3, atol=2e-3)
+
+
+@SET
+@given(kinds=st.lists(st.sampled_from(guard.FAULT_KINDS), min_size=1,
+                      unique=True).map(lambda ks: tuple(sorted(ks))),
+       fault_seed=st.integers(0, 2 ** 16),
+       rate=st.floats(min_value=0.1, max_value=1.0),
+       m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+       data_seed=st.integers(0, 2 ** 16))
+def test_guarded_matmul_never_escapes_silently(kinds, fault_seed, rate,
+                                               m, k, n, data_seed):
+    """Under ANY fault combination at ANY seed, a guarded matmul either
+    returns oracle-matching output (possibly from a lower ladder level)
+    or raises a typed GuardError — never a silent NaN/Inf — and the
+    injection ledger stays balanced (every fault accounted for)."""
+    rng = np.random.default_rng(data_seed)
+    a = jnp.asarray(rng.normal(size=(m, k)) * 0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)) * 0.5, jnp.float32)
+    guard.reset()
+    try:
+        with guard.fault_scope(kinds=kinds, seed=fault_seed, rate=rate):
+            try:
+                got = ops.skew_matmul(a, b)
+            except guard.GuardError:
+                got = None  # typed refusal is an allowed outcome
+        if got is not None:
+            assert bool(jnp.isfinite(got).all())
+            np.testing.assert_allclose(got, ref.matmul_ref(a, b),
+                                       rtol=5e-3, atol=5e-4)
+        assert guard.health.get("faults_caught") == \
+            guard.health.get("faults_injected")
+    finally:
+        guard.reset()
