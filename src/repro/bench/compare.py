@@ -51,6 +51,28 @@ _EXACT_NAMES = frozenset(
         "cache_entries",
         "scrubbed",
         "outliers",
+        # Serve-suite counters: simulated clock + modeled tuning, so the
+        # whole scheduler run is exactly reproducible — admissions,
+        # tuned hit/miss ledger, tick percentiles and MoE slot counts
+        # are all gated integer-exact.
+        "admitted",
+        "completed",
+        "prefill_batches",
+        "decode_steps",
+        "tokens_out",
+        "ticks",
+        "shape_classes",
+        "tuned_hits",
+        "tuned_misses",
+        "ttft_p50",
+        "ttft_p90",
+        "queue_p50",
+        "queue_p90",
+        "slots_total",
+        "slots_filled",
+        "underfilled",
+        "min_full_batch",
+        "verdict",
     },
 )
 # "speedup" metrics are modeled time ratios (sparse-vs-dense, the tuned
@@ -92,7 +114,9 @@ def metric_tolerance(metric: str) -> Tolerance:
     tail = metric.rsplit("_", 1)[-1]
     if tail in _FRACTION_SUFFIXES:
         return FRACTION
-    if tail in ("tflops", "gflops", "flops"):
+    # Modeled throughputs (cost-model arithmetic): tokens/sec from the
+    # serve suite rides the same band as the modeled FLOP rates.
+    if tail in ("tflops", "gflops", "flops") or metric.endswith("_per_s"):
         return MODELED_RATE
     if tail in ("bytes", "mib", "kib", "gib"):
         return SIZE

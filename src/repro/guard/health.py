@@ -22,6 +22,14 @@ Counters (monotonic within a process, `reset()` is test/suite-only):
   fallbacks                         degradation-ladder trips
   fallback_level                    gauge: the deepest ladder floor
                                     reached (index into fallback.LEVELS)
+  tuned_hits / tuned_misses         plan_mode="tuned" cache resolution
+                                    ledger (serve gates misses == 0)
+  moe_slots_total / _filled /       MoE capacity-slot accounting, opt-in
+  moe_slots_underfilled             via moe.track_capacity_slots() — the
+                                    scheduler drives underfilled to zero
+  serve_*                           scheduler telemetry (serve.sched.
+                                    telemetry: admissions, completions,
+                                    decode steps, prefill batches, ...)
 """
 
 from __future__ import annotations

@@ -124,7 +124,11 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     Semantically identical to kernels.ref.attention_ref; used for the
     full-model CPU/dry-run path (the Pallas kernel is the TPU-runtime path).
     q_positions / kv_positions (defaults arange) drive causal/window masks so
-    prefill-with-offset and ring caches reuse the same code.
+    prefill-with-offset and ring caches reuse the same code.  Either may be
+    1-D (shared across the batch) or 2-D (B, S) — per-row positions, the
+    continuous-batching decode case where every live request sits at its
+    own depth.  1-D positions broadcast, so the masks (and hence the
+    outputs) are bit-identical to the pre-batched-positions behaviour.
     """
     if CHUNK_OVERRIDE is not None:
         q_chunk, kv_chunk = CHUNK_OVERRIDE
@@ -137,6 +141,10 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
           else q_positions)
     kp = (jnp.arange(skv, dtype=jnp.int32) if kv_positions is None
           else kv_positions)
+    # normalize positions to (B, S): per-row masks below, shared
+    # positions just broadcast (identical values on every row).
+    qp = jnp.broadcast_to(qp, (b, sq))
+    kp = jnp.broadcast_to(kp, (b, skv))
 
     q_chunk = min(q_chunk, sq)
     kv_chunk = min(kv_chunk, skv)
@@ -145,22 +153,22 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     skv_p = -(-skv // kv_chunk) * kv_chunk
     if sq_p != sq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
-        qp = jnp.pad(qp, (0, sq_p - sq), constant_values=2**30)
+        qp = jnp.pad(qp, ((0, 0), (0, sq_p - sq)), constant_values=2**30)
     if skv_p != skv:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_p - skv), (0, 0)))
-        kp = jnp.pad(kp, (0, skv_p - skv), constant_values=-1)
+        kp = jnp.pad(kp, ((0, 0), (0, skv_p - skv)), constant_values=-1)
 
     nq, nk = sq_p // q_chunk, skv_p // kv_chunk
     qc = q.reshape(b, hq, nq, q_chunk, d)
     kc = k.reshape(b, hkv, nk, kv_chunk, d)
     vc = v.reshape(b, hkv, nk, kv_chunk, dv)
-    qpc = qp.reshape(nq, q_chunk)
-    kpc = kp.reshape(nk, kv_chunk)
+    qpc = qp.reshape(b, nq, q_chunk)
+    kpc = kp.reshape(b, nk, kv_chunk)
 
     def kv_step(carry, inp):
         m_prev, l_prev, acc, qi, qpi = carry
-        kj, vj, kpj = inp                       # (B,Hkv,ck,D), (ck,)
+        kj, vj, kpj = inp                       # (B,Hkv,ck,D), (B,ck)
         kje = jnp.repeat(kj, group, axis=1)     # (B,Hq,ck,D)
         vje = jnp.repeat(vj, group, axis=1)
         s = jnp.einsum("bhqd,bhkd->bhqk", qi.astype(jnp.float32),
@@ -168,16 +176,17 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         if softcap > 0.0:
             s = softcap * jnp.tanh(s / softcap)
         # kv positions < 0 are invalid (padding / unfilled ring slots).
-        mask = jnp.broadcast_to(kpj[None, :] >= 0, (q_chunk, kv_chunk))
+        mask = jnp.broadcast_to(kpj[:, None, :] >= 0,
+                                (b, q_chunk, kv_chunk))
         if causal:
-            mask &= kpj[None, :] <= qpi[:, None]
+            mask &= kpj[:, None, :] <= qpi[:, :, None]
         if window is not None:
-            mask &= kpj[None, :] > qpi[:, None] - window
-        s = jnp.where(mask[None, None], s, -1e30)
+            mask &= kpj[:, None, :] > qpi[:, :, None] - window
+        s = jnp.where(mask[:, None], s, -1e30)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         p = jnp.exp(s - m_new)
-        p = jnp.where(mask[None, None], p, 0.0)
+        p = jnp.where(mask[:, None], p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
         acc = acc * alpha + jnp.einsum("bhqk,bhkd->bhqd", p,
@@ -187,17 +196,21 @@ def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     kv_step = jax.checkpoint(kv_step)
     kc_t = jnp.moveaxis(kc, 2, 0)
     vc_t = jnp.moveaxis(vc, 2, 0)
+    kpc_t = jnp.moveaxis(kpc, 1, 0)
 
     def q_step(_, inp):
-        qi, qpi = inp                           # (B,Hq,cq,D), (cq,)
+        qi, qpi = inp                           # (B,Hq,cq,D), (B,cq)
         init = (jnp.full((b, hq, q_chunk, 1), -1e30, jnp.float32),
                 jnp.zeros((b, hq, q_chunk, 1), jnp.float32),
                 jnp.zeros((b, hq, q_chunk, dv), jnp.float32),
                 qi, qpi)
-        (m, l, acc, _, _), _ = jax.lax.scan(kv_step, init, (kc_t, vc_t, kpc))
+        (m, l, acc, _, _), _ = jax.lax.scan(kv_step, init,
+                                            (kc_t, vc_t, kpc_t))
         out = acc / jnp.maximum(l, 1e-30)
         return None, out.astype(q.dtype)
 
-    _, outs = jax.lax.scan(q_step, None, (jnp.moveaxis(qc, 2, 0), qpc))
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.moveaxis(qc, 2, 0),
+                            jnp.moveaxis(qpc, 1, 0)))
     out = jnp.moveaxis(outs, 0, 2).reshape(b, hq, sq_p, dv)
     return out[:, :, :sq]

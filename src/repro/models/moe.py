@@ -17,12 +17,34 @@ The expert GEMMs are exactly the paper's skewed-MM regime (deepseek:
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.models import layers
 from repro.models.layers import linear_init
+
+# Capacity-slot accounting (serve.sched telemetry).  Slot counts are
+# *static* — (E, capacity) comes from shapes, and the best case fill is
+# min(T*k, E*cap) — so recording them is trace-safe and costs nothing at
+# runtime.  Opt-in: benches and the serving scheduler enable it; training
+# and plain forward passes leave the guard.health ledger untouched.
+_TRACK_SLOTS = False
+
+
+@contextlib.contextmanager
+def track_capacity_slots():
+    """Record moe_slots_total / moe_slots_filled / moe_slots_underfilled
+    into guard.health for every MoE dispatch in scope."""
+    global _TRACK_SLOTS
+    prev = _TRACK_SLOTS
+    _TRACK_SLOTS = True
+    try:
+        yield
+    finally:
+        _TRACK_SLOTS = prev
 
 
 def init_moe(key, cfg) -> dict:
@@ -76,6 +98,13 @@ def _dispatch_compute_combine(xf, p, cfg, *, n_local_experts: int,
     aux = cfg.router_aux_coef * e * jnp.sum(frac_tokens * frac_probs)
 
     cap = _capacity(t, cfg)
+    if _TRACK_SLOTS:
+        from repro.guard import health as _health
+        total = n_local_experts * cap
+        filled = min(t * k, total)
+        _health.record("moe_slots_total", total)
+        _health.record("moe_slots_filled", filled)
+        _health.record("moe_slots_underfilled", total - filled)
     flat_e = gate_i.reshape(-1)                              # (T*K,)
     flat_t = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
     flat_w = gate_w.reshape(-1)

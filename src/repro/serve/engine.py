@@ -30,15 +30,9 @@ from repro.serve import kvcache
 # =====================================================================
 def _place_kv(t: jax.Array, cache_len: int) -> jax.Array:
     """t (B, S, ...) -> (B, L, ...) holding the last L tokens at slots
-    pos % L (ring) or [0:S] (full, S <= L)."""
-    b, s = t.shape[:2]
-    if s <= cache_len:
-        pad = [(0, 0), (0, cache_len - s)] + [(0, 0)] * (t.ndim - 2)
-        return jnp.pad(t, pad)
-    tail = t[:, s - cache_len:]
-    slots = jnp.mod(jnp.arange(s - cache_len, s), cache_len)
-    out = jnp.zeros((b, cache_len) + t.shape[2:], t.dtype)
-    return out.at[:, slots].set(tail)
+    pos % L (ring) or [0:S] (full, S <= L).  Delegates to the jit-safe
+    on-device helper in serve.kvcache (no host round-trip)."""
+    return kvcache.place_kv(t, cache_len)
 
 
 def _block_prefill(x, p, cfg: ModelConfig, kind: str, positions, max_len):
@@ -118,10 +112,14 @@ def _rec_prefill(x, p, cfg):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, max_len: int,
-            prefix_embeds=None, mm: mmcfg.MatmulConfig | None = None):
+            prefix_embeds=None, last_index=None,
+            mm: mmcfg.MatmulConfig | None = None):
     """tokens (B, S) -> (cache, last-position logits (B, V)).
 
     The cache is sized for max_len; positions [0, T) are filled.
+    `last_index` (B,) int32 selects the per-row logit position instead of
+    the shared final column — the right-padded-prompt case where row b's
+    last real token sits at its own index (continuous batching).
     `mm` scopes a matmul configuration over every contraction of the
     prefill (equivalent to wrapping the call in ``with mm_config(...)``;
     an enclosing context still applies when mm is None).
@@ -150,7 +148,11 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_len: int,
                 jax.checkpoint(unit_prefill), x, params[f"stage{si}"])
             cache[f"stage{si}"] = stage_cache
         h = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-        logits = transformer.unembed(params, cfg, h[:, -1])
+        if last_index is None:
+            last = h[:, -1]
+        else:
+            last = h[jnp.arange(h.shape[0]), last_index]
+        logits = transformer.unembed(params, cfg, last)
         return cache, logits
 
 
@@ -158,40 +160,64 @@ def prefill(params, cfg: ModelConfig, tokens, *, max_len: int,
 # decode
 # =====================================================================
 def _decode_gqa(h, p, cfg: ModelConfig, entry, pos, window):
-    """h (B, 1, D); entry k/v (B, L, KV, hd); pos scalar int32."""
+    """h (B, 1, D); entry k/v (B, L, KV, hd); pos scalar int32, or (B,)
+    per-row positions (continuous batching — every live request at its
+    own depth; the scalar path is kept verbatim for bit-compatibility)."""
     b = h.shape[0]
     hq, hd = cfg.n_heads, cfg.head_dim
     clen = entry["k"].shape[1]
     is_ring = window is not None
-    q, k_new, v_new = attn_mod.gqa_project(
-        h, p, cfg, jnp.full((1,), pos, jnp.int32))
-    slot = jnp.mod(pos, clen) if is_ring else pos
-    k_cache = jax.lax.dynamic_update_slice(
-        entry["k"], k_new, (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        entry["v"], v_new, (0, slot, 0, 0))
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        q, k_new, v_new = attn_mod.gqa_project(
+            h, p, cfg, jnp.full((1,), pos, jnp.int32))
+        slot = jnp.mod(pos, clen) if is_ring else pos
+        k_cache = jax.lax.dynamic_update_slice(
+            entry["k"], k_new, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            entry["v"], v_new, (0, slot, 0, 0))
+        q_pos = jnp.full((1,), pos, jnp.int32)
+    else:
+        q, k_new, v_new = attn_mod.gqa_project(h, p, cfg, pos[:, None])
+        slot = jnp.mod(pos, clen) if is_ring else pos
+        rows = jnp.arange(b)
+        k_cache = entry["k"].at[rows, slot].set(k_new[:, 0])
+        v_cache = entry["v"].at[rows, slot].set(v_new[:, 0])
+        q_pos = pos[:, None]
     kv_pos = kvcache.kv_slot_positions(pos, clen, is_ring)
     ctx = layers.blockwise_attention(
         jnp.swapaxes(q, 1, 2), jnp.swapaxes(k_cache, 1, 2),
         jnp.swapaxes(v_cache, 1, 2),
         causal=True, window=window, softcap=cfg.attn_softcap,
-        q_positions=jnp.full((1,), pos, jnp.int32), kv_positions=kv_pos)
+        q_positions=q_pos, kv_positions=kv_pos)
     ctx = jnp.swapaxes(ctx, 1, 2).reshape(b, 1, hq * hd)
     out = skewmm.matmul(ctx, p["wo"])
     return out, {"k": k_cache, "v": v_cache}
 
 
 def _decode_mla(h, p, cfg: ModelConfig, entry, pos):
-    """Absorbed-form MLA decode: scores/values via the latent cache."""
+    """Absorbed-form MLA decode: scores/values via the latent cache.
+    pos scalar, or (B,) per-row (scalar path kept verbatim)."""
     b = h.shape[0]
     nh, nope, rd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
     kvr, vd = cfg.kv_lora_rank, cfg.v_head_dim
-    pos1 = jnp.full((1,), pos, jnp.int32)
-    latent_new, k_rope_new = attn_mod.mla_latent(h, p, cfg, pos1)
-    latent = jax.lax.dynamic_update_slice(entry["latent"], latent_new,
-                                          (0, pos, 0))
-    k_rope = jax.lax.dynamic_update_slice(entry["k_rope"], k_rope_new,
-                                          (0, pos, 0))
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos1 = jnp.full((1,), pos, jnp.int32)
+        latent_new, k_rope_new = attn_mod.mla_latent(h, p, cfg, pos1)
+        latent = jax.lax.dynamic_update_slice(entry["latent"], latent_new,
+                                              (0, pos, 0))
+        k_rope = jax.lax.dynamic_update_slice(entry["k_rope"], k_rope_new,
+                                              (0, pos, 0))
+        valid = jnp.arange(latent.shape[1]) <= pos
+        valid = valid[None]                                # (1, L)
+    else:
+        pos1 = pos[:, None]
+        latent_new, k_rope_new = attn_mod.mla_latent(h, p, cfg, pos1)
+        rows = jnp.arange(b)
+        latent = entry["latent"].at[rows, pos].set(latent_new[:, 0])
+        k_rope = entry["k_rope"].at[rows, pos].set(k_rope_new[:, 0])
+        valid = jnp.arange(latent.shape[1])[None, :] <= pos[:, None]
     q_nope, q_rope = attn_mod.mla_queries(h, p, cfg, pos1)
     q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]            # (B, H, *)
     wkv_b = p["wkv_b"].reshape(kvr, nh, nope + vd)
@@ -205,8 +231,7 @@ def _decode_mla(h, p, cfg: ModelConfig, entry, pos):
     scores *= (nope + rd) ** -0.5
     if cfg.attn_softcap > 0.0:
         scores = cfg.attn_softcap * jnp.tanh(scores / cfg.attn_softcap)
-    valid = jnp.arange(latent.shape[1]) <= pos
-    scores = jnp.where(valid[None, None], scores, -1e30)
+    scores = jnp.where(valid[:, None], scores, -1e30)
     w = jax.nn.softmax(scores, axis=-1)
     ctx_lat = jnp.einsum("bhl,blr->bhr", w, latent.astype(jnp.float32))
     ctx = jnp.einsum("bhr,rhv->bhv", ctx_lat, wv.astype(jnp.float32))
@@ -276,17 +301,23 @@ def _block_decode(x, p, cfg: ModelConfig, kind: str, entry, pos):
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos,
                 mm: mmcfg.MatmulConfig | None = None):
     """One decode step.  tokens (B,) int32; pos () int32 — the absolute
-    position being generated.  Returns (logits (B, V), new_cache).
+    position being generated — or (B,) int32 per-row positions (the
+    continuous-batching case: each live request decodes at its own
+    depth).  Returns (logits (B, V), new_cache).
 
     `mm` scopes a matmul configuration over the step's contractions (the
     maximally right-skewed regime — a decode-serving thread can pin e.g.
     a lower AMP without touching any model code)."""
+    pos = jnp.asarray(pos, jnp.int32)
     with mmcfg.scope(mm):
         x = transformer.embed_tokens(params, cfg, tokens[:, None])
         if cfg.pos_embedding == "sinusoidal":
-            x = x + layers.sinusoidal_pos(
-                jnp.full((1,), pos, jnp.int32),
-                cfg.d_model)[None].astype(x.dtype)
+            if pos.ndim == 0:
+                pe = layers.sinusoidal_pos(
+                    jnp.full((1,), pos, jnp.int32), cfg.d_model)[None]
+            else:
+                pe = layers.sinusoidal_pos(pos[:, None], cfg.d_model)
+            x = x + pe.astype(x.dtype)
         new_cache = {}
         for si, (unit, n) in enumerate(cfg.stage_list()):
 

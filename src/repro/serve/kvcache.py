@@ -7,7 +7,8 @@ Cache kinds:
   * ssm  — constant-size SSD state (R, B, H, S, P) + conv tail
   * rec  — constant-size LRU state (R, B, W) + conv tail
 Ring semantics: token at absolute position p lives in slot p % L; slot
-validity is recovered arithmetically from the scalar decode position, so no
+validity is recovered arithmetically from the decode position (scalar, or
+(B,) for continuous batching — each row at its own position), so no
 per-slot position array is stored.
 """
 
@@ -28,12 +29,78 @@ def attn_cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
 def kv_slot_positions(pos: jax.Array, cache_len: int,
                       is_ring: bool) -> jax.Array:
     """Absolute position held by each slot once the token at `pos` is
-    written; invalid slots get -1 (blockwise_attention masks them)."""
+    written; invalid slots get -1 (blockwise_attention masks them).
+
+    `pos` is a scalar (-> (L,)) or a (B,) per-row position vector
+    (-> (B, L)); values broadcast, so the scalar rows equal the vector
+    rows exactly."""
     idx = jnp.arange(cache_len, dtype=jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)[..., None]
     if not is_ring:
         return jnp.where(idx <= pos, idx, -1)
     p = pos - jnp.mod(pos - idx, cache_len)
     return jnp.where(p >= 0, p, -1)
+
+
+def pad_axis(t: jax.Array, axis: int, length: int) -> jax.Array:
+    """Zero-pad `axis` of `t` up to `length` entirely on device.
+
+    jit-safe (pure lax, static shapes, no host round-trip) — the padding
+    half of pad-on-device/unpad-on-fetch used by `place_kv` and by the
+    scheduler's live-batch growth."""
+    cur = t.shape[axis]
+    if cur == length:
+        return t
+    if cur > length:
+        raise ValueError(f"axis {axis} is {cur}, cannot pad to {length}")
+    out = jnp.zeros(t.shape[:axis] + (length,) + t.shape[axis + 1:],
+                    t.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(out, t, 0, axis)
+
+
+def place_kv(t: jax.Array, cache_len: int) -> jax.Array:
+    """t (B, S, ...) -> (B, L, ...) holding the last L tokens at slots
+    pos % L (ring) or [0:S] (full, S <= L).  On-device end to end."""
+    s = t.shape[1]
+    if s <= cache_len:
+        return pad_axis(t, 1, cache_len)
+    tail = jax.lax.slice_in_dim(t, s - cache_len, s, axis=1)
+    slots = jnp.mod(jnp.arange(s - cache_len, s), cache_len)
+    out = jnp.zeros(t.shape[:1] + (cache_len,) + t.shape[2:], t.dtype)
+    return out.at[:, slots].set(tail)
+
+
+class SlotFreeList:
+    """Free-list over the rows of a live KV slab.
+
+    The continuous-batching scheduler allocates one slab row per live
+    request; finished requests return their row here and admissions pop
+    the lowest free row (deterministic — replay-stable)."""
+
+    def __init__(self, capacity: int):
+        self._free = list(range(capacity))
+        self.capacity = capacity
+
+    def __len__(self) -> int:
+        return len(self._free)
+
+    def grow(self, new_capacity: int) -> None:
+        if new_capacity < self.capacity:
+            raise ValueError("free-list cannot shrink below capacity")
+        self._free.extend(range(self.capacity, new_capacity))
+        self._free.sort()
+        self.capacity = new_capacity
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise IndexError("no free KV slots")
+        self._free.sort()
+        return self._free.pop(0)
+
+    def release(self, slot: int) -> None:
+        if not 0 <= slot < self.capacity or slot in self._free:
+            raise ValueError(f"bad slot release: {slot}")
+        self._free.append(slot)
 
 
 def _conv_channels(cfg: ModelConfig, kind: str) -> int:

@@ -123,6 +123,13 @@ def use_cache(cache: TuneCache | str | None) -> Iterator[TuneCache | None]:
 
 
 # ---------------------------------------------------------------- lookups
+def _count(entry) -> None:
+    # Hit/miss ledger for the serving scheduler's coverage gate: under
+    # plan_mode="tuned" the bucket table promises every scheduled GEMM
+    # resolves in-cache, and the bench gates tuned_misses == 0 exact.
+    _health.record("tuned_hits" if entry is not None else "tuned_misses")
+
+
 def lookup_dense(
     m: int,
     k: int,
@@ -135,6 +142,7 @@ def lookup_dense(
 ) -> BlockPlan | None:
     cls = ShapeClass.of(m, k, n, batch)
     entry = get_active_cache().get(dense_key(chip.name, dtype_bytes, amp, cls))
+    _count(entry)
     # cache_corrupt injection point: an armed fault scope can replace the
     # result (hit or miss — a corrupt cache fabricates entries too) with
     # the sentinel plan the planners' budget re-check rejects.
@@ -151,6 +159,7 @@ def lookup_sparse(
     chip: hw.ChipSpec,
 ) -> BlockPlan | None:
     entry = get_active_cache().get(sparse_key(chip.name, dtype_bytes, amp, summary, n))
+    _count(entry)
     return _faults.maybe_corrupt_lookup(
         None if entry is None else entry.plan, "lookup_sparse")
 
@@ -169,5 +178,6 @@ def lookup_grouped(
     entry = get_active_cache().get(
         grouped_key(chip.name, dtype_bytes, amp, groups, cls)
     )
+    _count(entry)
     return _faults.maybe_corrupt_lookup(
         None if entry is None else entry.plan, "lookup_grouped")

@@ -113,3 +113,196 @@ def test_mla_cache_is_compressed():
     gqa_equiv = (cfg.n_layers * 1024 *
                  2 * cfg.n_heads * cfg.head_dim * 2)  # bf16 k+v
     assert total < 0.05 * gqa_equiv
+
+
+# ---------------------------------------------------------------- sched
+from repro.core.config import mm_config            # noqa: E402
+from repro.guard import faults as gfaults          # noqa: E402
+from repro.guard import health as ghealth          # noqa: E402
+from repro.serve.sched import (                    # noqa: E402
+    AdmissionPolicy,
+    BucketTable,
+    Scheduler,
+    assert_covered,
+    build_tuned_cache,
+    capture_gemm_specs,
+    min_full_batch,
+    scripted_trace,
+)
+from repro.serve.sched.buckets import bucket_up    # noqa: E402
+from repro.tune import runtime as tune_runtime     # noqa: E402
+
+
+def _sched_model(arch="phi4-mini-3.8b"):
+    cfg = get_config(arch).reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_pad_axis_and_place_kv():
+    t = jnp.arange(6.0).reshape(2, 3)
+    padded = kvcache.pad_axis(t, 1, 5)
+    assert padded.shape == (2, 5)
+    np.testing.assert_array_equal(np.asarray(padded[:, :3]), np.asarray(t))
+    np.testing.assert_array_equal(np.asarray(padded[:, 3:]), 0.0)
+    with pytest.raises(ValueError):
+        kvcache.pad_axis(t, 1, 2)  # shrink is not padding
+
+
+def test_slot_free_list():
+    fl = kvcache.SlotFreeList(2)
+    assert fl.alloc() == 0 and fl.alloc() == 1
+    with pytest.raises(IndexError):
+        fl.alloc()                       # exhausted
+    fl.release(0)
+    with pytest.raises(ValueError):
+        fl.release(0)                    # double free
+    fl.grow(4)
+    # lowest-first: freed 0 beats the new rows 2, 3
+    assert fl.alloc() == 0 and fl.alloc() == 2
+    assert fl.capacity == 4 and len(fl) == 1
+
+
+def test_kv_slot_positions_batched():
+    pos = kvcache.kv_slot_positions(jnp.asarray([1, 3]), 4, False)
+    np.testing.assert_array_equal(np.asarray(pos),
+                                  [[0, 1, -1, -1], [0, 1, 2, 3]])
+
+
+def test_bucket_table():
+    assert [bucket_up(d) for d in (1, 2, 3, 9, 16)] == [1, 2, 4, 16, 16]
+    table = BucketTable.for_workload(max_batch=4, max_prompt=12, max_new=4)
+    assert table.batch_buckets == (1, 2, 4)
+    assert table.prompt_buckets == (1, 2, 4, 8, 16)
+    assert table.max_len == 20
+    # stability: every size in a bucket maps to that bucket
+    for s in range(5, 9):
+        assert table.prompt_bucket(s) == 8
+    with pytest.raises(ValueError):
+        table.prompt_bucket(17)
+    with pytest.raises(ValueError):
+        BucketTable(batch_buckets=(3,), prompt_buckets=(8,),
+                    max_new=1, max_len=16)
+
+
+def test_bucket_table_rejects_non_attention():
+    table = BucketTable.for_workload(max_batch=2, max_prompt=8, max_new=2)
+    with pytest.raises(ValueError, match="attention-only"):
+        table.validate_for(get_config("mamba2-2.7b").reduced())
+
+
+def test_scheduler_completes_and_respects_admission_bound():
+    cfg, params = _sched_model()
+    table = BucketTable.for_workload(max_batch=4, max_prompt=16, max_new=4)
+    policy = AdmissionPolicy(max_live=2, max_admit_per_tick=2)
+    trace = scripted_trace(
+        [(0, 3, 2), (0, 9, 2), (0, 5, 2), (1, 12, 1), (3, 2, 2)],
+        vocab_size=cfg.vocab_size, seed=11)
+    sched = Scheduler(params, cfg, table, policy=policy, guard=False)
+    for r in trace:
+        sched.submit(r)
+    for _ in range(50):
+        if not sched.queue and not sched.live:
+            break
+        sched.step()
+        assert sched.n_live <= policy.max_live
+    assert sorted(sched.results) == [r.rid for r in trace]
+    for r in trace:
+        assert len(sched.results[r.rid]["tokens"]) == r.max_new
+    assert sched.telemetry.completed == len(trace)
+
+
+def test_join_leave_logits_bit_identical_to_solo_decode():
+    """Continuous batching must not perturb survivors: every logits row,
+    across joins, leaves and slab growth, equals a solo decode exactly."""
+    cfg, params = _sched_model()
+    table = BucketTable.for_workload(max_batch=4, max_prompt=16, max_new=4)
+    entries = [(0, 3, 4), (0, 5, 3), (1, 9, 4), (2, 2, 3)]
+    trace = scripted_trace(entries, vocab_size=cfg.vocab_size, seed=7)
+    sched = Scheduler(params, cfg, table, guard=False, trace_logits=True)
+    results = sched.run(trace, max_ticks=50)
+    assert len(results) == len(trace)
+    assert sched.slab_batch == 4        # the slab grew 2 -> 4 mid-run
+
+    for req in trace:
+        pb = table.prompt_bucket(req.prompt_len)
+        toks = np.zeros((1, pb), np.int32)
+        toks[0, :req.prompt_len] = req.tokens
+        cache, logits = engine.prefill(
+            params, cfg, jnp.asarray(toks), max_len=table.max_len,
+            last_index=jnp.asarray([req.prompt_len - 1]))
+        want = [np.asarray(logits)[0]]
+        tok, pos = int(jnp.argmax(logits[0])), req.prompt_len
+        for _ in range(req.max_new - 1):
+            logits, cache = engine.decode_step(
+                params, cfg, cache, jnp.asarray([tok], jnp.int32),
+                jnp.asarray(pos, jnp.int32))
+            want.append(np.asarray(logits)[0])
+            tok, pos = int(jnp.argmax(logits[0])), pos + 1
+        got = sched.logit_trace[req.rid]
+        assert len(got) == len(want) == req.max_new
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w)
+
+
+def test_scheduler_tuned_mode_zero_misses():
+    cfg, params = _sched_model()
+    table = BucketTable.for_workload(max_batch=2, max_prompt=8, max_new=2)
+    specs = capture_gemm_specs(params, cfg, table)
+    cache = build_tuned_cache(params, cfg, table)
+    assert_covered(cache, specs)
+    trace = scripted_trace([(0, 3, 2), (0, 6, 2), (1, 8, 1)],
+                           vocab_size=cfg.vocab_size, seed=5)
+    ghealth.reset()
+    with tune_runtime.use_cache(cache), mm_config(plan_mode="tuned"):
+        sched = Scheduler(params, cfg, table)
+        results = sched.run(trace, max_ticks=50)
+    snap = ghealth.snapshot()
+    ghealth.reset()
+    assert len(results) == len(trace)
+    assert snap.get("tuned_misses", 0) == 0
+    assert snap.get("tuned_hits", 0) > 0
+
+
+def test_scheduler_chaos_no_eviction():
+    """Poisoned decode batches are scrubbed (PR 6 ladder), never evicted:
+    every request still completes with its full token budget."""
+    cfg, params = _sched_model()
+    table = BucketTable.for_workload(max_batch=2, max_prompt=8, max_new=3)
+    trace = scripted_trace([(0, 3, 3), (1, 6, 3)],
+                           vocab_size=cfg.vocab_size, seed=9)
+    ghealth.reset()
+    with gfaults.fault_scope(seed=5, kinds=("nan_output", "inf_output")):
+        sched = Scheduler(params, cfg, table)   # guard=True default
+        results = sched.run(trace, max_ticks=50)
+    snap = ghealth.snapshot()
+    ghealth.reset()
+    assert sorted(results) == [0, 1]
+    for r in trace:
+        assert len(results[r.rid]["tokens"]) == r.max_new
+    assert snap.get("faults_injected", 0) > 0
+    assert snap.get("faults_injected") == snap.get("faults_caught")
+    assert snap.get("scrubbed_batches", 0) > 0
+
+
+def test_moe_capacity_slots_full_when_batched():
+    cfg = dataclasses.replace(
+        get_config("dbrx-132b").reduced(),
+        n_experts=4, n_experts_per_tok=2, capacity_factor=1.0)
+    mfb = min_full_batch(cfg)
+    assert mfb == 16
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    table = BucketTable.for_workload(max_batch=mfb, max_prompt=4,
+                                     max_new=2, min_batch=mfb)
+    trace = scripted_trace([(0, 4, 2)] * mfb,
+                           vocab_size=cfg.vocab_size, seed=3)
+    ghealth.reset()
+    sched = Scheduler(params, cfg, table, guard=False)
+    results = sched.run(trace, max_ticks=20)
+    snap = ghealth.snapshot()
+    ghealth.reset()
+    assert len(results) == mfb
+    assert snap["moe_slots_total"] > 0
+    # snapshot() drops zero counters: absent == zero underfilled
+    assert snap.get("moe_slots_underfilled", 0) == 0
+    assert snap["moe_slots_filled"] == snap["moe_slots_total"]
