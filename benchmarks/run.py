@@ -25,6 +25,13 @@ Suites:
   tuned       — measured-autotuner selection (repro.tune) against a
                 deterministic synthetic host: tuned-vs-modeled plan
                 agreement rate and speedup per chip, gated in CI
+  decode_gemv — extreme-skew decode: the GEMV shape classes (m in
+                {1,4,8} against the LM-head weight) through the
+                autotuner's selection machinery per chip — the
+                dense-vs-split-K family switch gated integer-exact —
+                plus the decode-scale serve coverage proof (decode
+                shape classes resolving to split-K tuned entries on
+                the GC200)
   train       — reduced-config train-step wall time per arch family
   decode      — reduced-config decode wall time per arch family
   guard       — chaos smoke: deterministic fault injection
@@ -201,6 +208,41 @@ def fig5_skewed_mm(rec, ctx):
                             "naive_spread": max(naive) - min(naive),
                         },
                     )
+
+            # ---- extreme-skew decode tail: m in {1, 4, 8} against an
+            # LM-head-sized weight (bf16).  Beyond the paper's 2^±8 axis:
+            # the planner may leave the dense family entirely (split-K
+            # GEMV), and the chips disagree — the GC200's uniform-latency
+            # SRAM keeps these compute-bound (split-K's Amdahl win), while
+            # HBM chips are bandwidth-bound streaming B and correctly stay
+            # dense.  family_switch and gemv_gain are pure cost-model
+            # arithmetic, gated exactly / tightly against baselines.
+            k_dec, n_dec = 4096, 32768
+            for m_dec in (1, 4, 8):
+                planned_c = plan_matmul(m_dec, k_dec, n_dec, dtype_bytes=2)
+                dense_c = plan_matmul(
+                    m_dec, k_dec, n_dec, dtype_bytes=2, mode="dense"
+                )
+                rec(
+                    f"fig5_{chip.name}_decode_m{m_dec}",
+                    axes={"chip": chip.name, "m": m_dec, "k": k_dec,
+                          "n": n_dec},
+                    metrics={
+                        "planned_frac": planned_c.roofline_fraction(chip),
+                        "dense_frac": dense_c.roofline_fraction(chip),
+                        "gemv_gain": dense_c.total_s / planned_c.total_s,
+                        "family_switch": int(
+                            planned_c.plan.schedule == "splitk"
+                        ),
+                    },
+                    info={
+                        "schedule": planned_c.plan.schedule,
+                        "plan": f"{planned_c.plan.bm}x{planned_c.plan.bk}"
+                                f"x{planned_c.plan.bn}",
+                        "bound": planned_c.bound,
+                    },
+                    plan=planned_c,
+                )
 
 
 @SUITE.register("vertex")
@@ -497,6 +539,84 @@ def tab_tuned_vs_modeled(rec, ctx):
         )
 
 
+@SUITE.register("decode_gemv")
+def tab_decode_gemv(rec, ctx):
+    """GEMV decode classes through the measured autotuner + serve coverage.
+
+    Two halves, both deterministic (identical at either fidelity):
+
+    * Per chip, `tune_decode` runs the decode shape classes (m in
+      {1, 4, 8} exact against the LM-head-sized K=4096 / N=32768 bf16
+      weight) through the autotuner's selection machinery with the
+      modeled measurer — the family the winner lands in
+      (``family_switch``) is the planner's dense-vs-split-K decision and
+      is gated integer-exact: the GC200 leaves the dense family at the
+      m-tail (compute-bound SRAM, split-K's Amdahl win) while HBM chips
+      are bandwidth-bound streaming B and correctly stay dense.
+    * ``decode_gemv_serve_coverage`` captures the decode-step GEMMs of
+      the decode-scale reduced config (the serve smoke's model), tunes a
+      covering cache on the GC200, and counts how many decode shape
+      classes resolve to measured split-K entries — the
+      serve-scheduler-facing contract (`gemv_decode_coverage`), gated
+      exact.
+    """
+    from repro.configs.base import get_config
+    from repro.models.model import build_model
+    from repro.serve.sched import BucketTable, build_tuned_cache
+    from repro.serve.sched.buckets import (
+        decode_gemm_specs,
+        gemv_decode_coverage,
+    )
+    from repro.tune.shapeclass import GEMV_M_CLASSES
+    from repro.tune.tuner import modeled_measurer, tune_decode
+
+    k_dec, n_dec = 4096, 32768
+    for chip_name in ctx.chips:
+        chip = hw.get_chip(chip_name)
+        with mm_config(chip=chip):
+            entries = tune_decode(
+                k_dec, n_dec, dtype_bytes=2, measurer=modeled_measurer()
+            )
+            for m_dec, e in zip(GEMV_M_CLASSES, entries):
+                rec(
+                    f"decode_gemv_{chip.name}_m{m_dec}",
+                    axes={"chip": chip.name, "m": m_dec, "k": k_dec,
+                          "n": n_dec},
+                    metrics={
+                        "family_switch": int(e.schedule == "splitk"),
+                        "agreement_frac": float(e.agreement),
+                        "speedup": e.speedup,
+                    },
+                    info={
+                        "tuned": f"{e.schedule}:"
+                                 f"{'x'.join(str(b) for b in e.blocks)}",
+                        "key": e.key,
+                    },
+                )
+
+    # ---- serve-facing coverage: decode steps resolve split-K entries.
+    cfg = get_config("phi4-mini-3.8b").reduced().decode_scale()
+    with mm_config(chip="ipu_gc200"):
+        params = build_model(cfg).init(jax.random.PRNGKey(0))
+        table = BucketTable.for_workload(max_batch=4, max_prompt=8,
+                                         max_new=2)
+        cache = build_tuned_cache(params, cfg, table)
+        cov = gemv_decode_coverage(
+            cache, decode_gemm_specs(params, cfg, table)
+        )
+    if not cov["gemv_classes"]:
+        raise AssertionError(
+            "no decode shape class resolved to a split-K tuned entry on "
+            "ipu_gc200 — the GEMV family is unreachable from the serve "
+            "scheduler"
+        )
+    rec(
+        "decode_gemv_serve_coverage",
+        axes={"arch": cfg.name, "chip": "ipu_gc200"},
+        metrics=dict(cov),
+    )
+
+
 @SUITE.register("train")
 def bench_train_step(rec, ctx):
     """Reduced-config train-step wall time per arch family."""
@@ -719,6 +839,10 @@ def tab_serve_sched(rec, ctx):
       under ``plan_mode="tuned"``; the bucket-table contract is that
       every padded GEMM resolves in-cache, so ``tuned_misses`` is gated
       at zero alongside the full telemetry ledger.
+    * ``serve_gemv_decode`` — the same trace machinery at decode-scale
+      weights planned for the GC200: decode steps must resolve measured
+      split-K (GEMV) tuned-cache entries (``tuned_hits_gemv`` > 0) with
+      the zero-miss contract intact.
     * ``serve_moe_slots_*`` — decode-time expert GEMMs merged across
       requests vs the same trace served one request at a time: batching
       at `min_full_batch` ships every `grouped_matmul` capacity slot
@@ -805,6 +929,43 @@ def tab_serve_sched(rec, ctx):
         },
         info={"counters": "/".join(
             f"{k}:{v}" for k, v in sorted(snap.items()))},
+    )
+
+    # --- decode-scale trace: decode steps resolve split-K entries ------
+    # Same machinery, decode-scale weights (K >= 1024), planned for the
+    # GC200: the bucket table's decode GEMMs tune to the split-K family
+    # there, so beyond the usual zero-miss contract the run must ledger
+    # split-K tuned *hits* — measured GEMV plans actually dispatched by
+    # the scheduler's decode steps, not just covered by the cache.
+    dcfg = cfg.decode_scale()
+    dtable = BucketTable.for_workload(max_batch=4, max_prompt=8, max_new=2)
+    dentries = [(0, 3, 2), (0, 6, 1), (1, 5, 2), (2, 7, 2)]
+    with mm_config(chip="ipu_gc200"):
+        dsched, dsnap, dn_specs = run_trace(dcfg, dtable, dentries)
+    if dsnap.get("tuned_misses", 0):
+        raise AssertionError(
+            f"decode-scale trace missed {dsnap['tuned_misses']} tuned "
+            "lookups — bucket table does not cover the served shapes"
+        )
+    if not dsnap.get("tuned_hits_gemv", 0):
+        raise AssertionError(
+            "decode-scale trace resolved no split-K tuned entry on "
+            "ipu_gc200 — decode steps are not reaching the GEMV family"
+        )
+    rec(
+        "serve_gemv_decode",
+        axes={"arch": dcfg.name, "chip": "ipu_gc200"},
+        metrics={
+            "completed": dsched.telemetry.completed,
+            "decode_steps": dsched.telemetry.decode_steps,
+            "tokens_out": dsched.telemetry.tokens_out,
+            "shape_classes": dn_specs,
+            "tuned_hits": dsnap.get("tuned_hits", 0),
+            "tuned_misses": dsnap.get("tuned_misses", 0),
+            "tuned_hits_gemv": dsnap.get("tuned_hits_gemv", 0),
+        },
+        info={"counters": "/".join(
+            f"{k}:{v}" for k, v in sorted(dsnap.items()))},
     )
 
     # --- MoE capacity slots: cross-request batching vs sequential ------

@@ -73,12 +73,22 @@ _EXACT_NAMES = frozenset(
         "underfilled",
         "min_full_batch",
         "verdict",
+        # Decode/GEMV counters: family selection and tuned-class coverage
+        # are pure cost-model arithmetic plus dictionary lookups, so the
+        # planner's dense-vs-split-K switch is gated integer-exact.
+        "family_switch",
+        "decode_classes",
+        "gemv_classes",
+        "dense_classes",
+        "tuned_hits_gemv",
     },
 )
 # "speedup" metrics are modeled time ratios (sparse-vs-dense, the tuned
 # suite's synthetic-host selection) — deterministic arithmetic, gated
-# with the same absolute band as fractions.
-_FRACTION_SUFFIXES = ("frac", "fraction", "util", "spread", "min", "max", "speedup")
+# with the same absolute band as fractions.  "gain" is the decode tail's
+# dense-over-GEMV modeled ratio, same arithmetic.
+_FRACTION_SUFFIXES = ("frac", "fraction", "util", "spread", "min", "max",
+                      "speedup", "gain")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -115,6 +115,10 @@ class BenchSuite:
     def select(self, only: str | None = None) -> list[SuiteSpec]:
         specs = list(self._suites.values())
         if only:
+            # An exact suite name selects just that suite ("decode" must
+            # not also run "decode_gemv"); anything else is a substring.
+            if only in self._suites:
+                return [self._suites[only]]
             specs = [s for s in specs if only in s.name]
         return specs
 

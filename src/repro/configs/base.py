@@ -182,6 +182,27 @@ class ModelConfig:
             dtype="float32",
         )
 
+    def decode_scale(self) -> "ModelConfig":
+        """Decode-scale weight matrices on whatever layer stack `self` has.
+
+        Apply on top of `reduced()` for the decode / GEMV smoke: the
+        reduced dims (d_model=128, vocab=512) keep every decode GEMM at
+        one grid step for *any* schedule, so the planner correctly stays
+        dense there and the split-K family is unreachable.  K >= 1024
+        puts the decode-step GEMMs inside the GEMV regime while staying
+        small enough (~20M params fp32) for interpret-mode CI.
+        """
+        return dataclasses.replace(
+            self,
+            name=self.name + "-decode",
+            d_model=1024,
+            n_heads=8,
+            n_kv_heads=min(8, self.n_kv_heads) if self.n_kv_heads else 8,
+            head_dim=128,
+            d_ff=2048,
+            vocab_size=4096,
+        )
+
 
 def register(name: str):
     def deco(fn: Callable[[], ModelConfig]):

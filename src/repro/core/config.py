@@ -36,7 +36,7 @@ from typing import Any, Iterator
 from repro.core import hw
 
 BACKENDS = ("xla", "pallas")
-PLAN_MODES = ("skew_aware", "k_inner", "naive", "tuned")
+PLAN_MODES = ("skew_aware", "dense", "k_inner", "naive", "tuned")
 
 _ENV_BACKEND = "REPRO_MM_BACKEND"
 

@@ -29,6 +29,20 @@ Schedules (the loop-order family `kernels.skew_matmul` implements):
                  B streamed once, A per n-block, C revisited per k-block.
                  Wins for left-skewed (m >> n) shapes.
 
+The GEMV family (`GEMV_SCHEDULES`) covers the decode regime — the paper's
+right-skew limit, m a handful of rows against tens of thousands of cache
+columns — where no dense loop order can feed the matrix engine:
+
+  "splitk"     — two-pass split-K: grid (k_splits, n) computes fp32 partial
+                 products in parallel over K *and* N, then a second (n,)-grid
+                 pass tree-reduces the k_splits partials and applies the
+                 structured epilogue once after the final reduce.  A is read
+                 per n-block, B exactly once, plus one write + one read of
+                 the (k_splits, m, n) fp32 partial accumulator.  Compute runs
+                 at `chip.gemv_splitk_frac * gs/(gs+1)` of peak — the
+                 K-parallel vertex tree substitutes for MXU row fill, with an
+                 Amdahl-style discount for the serial reduce.
+
 A plan may additionally put a leading batch dimension in the grid
 (`batch_grid=True`) instead of folding it into m — worthwhile when folding
 would straddle batch boundaries with a badly padded bm.
@@ -45,6 +59,11 @@ import math
 from repro.core import hw
 
 SCHEDULES = ("k_inner", "a_resident", "b_resident")
+# The split-K / tree-reduction GEMV family: searched alongside SCHEDULES
+# when m (after batch folding) is below the MXU row granularity, priced by
+# the same cost_matmul so family switching is a pure argmin.
+GEMV_SCHEDULES = ("splitk",)
+ALL_SCHEDULES = SCHEDULES + GEMV_SCHEDULES
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -108,6 +127,9 @@ class BlockPlan:
     def grid_steps(self, d: MatmulDims) -> int:
         gm, gn, gk = self.grid(d)
         steps = gm * gn * gk
+        if self.schedule == "splitk":
+            # The second (reduction) pass visits every output block once.
+            steps += gm * gn
         return steps * d.batch if self.batch_grid else steps
 
     def vmem_bytes(self, d: MatmulDims) -> int:
@@ -122,6 +144,15 @@ class BlockPlan:
         gk = _ceil_div(d.k, self.bk)
         a = self.bm * self.bk * d.dtype_bytes
         b = self.bk * self.bn * d.dtype_bytes
+        if self.schedule == "splitk":
+            # Pass 1 streams (A, B) blocks and writes one fp32 partial block;
+            # pass 2 holds the whole (gk, bm, bn) partial slab for the tree
+            # reduce plus the double-buffered output block.  The AMP budget
+            # must cover whichever pass is wider.
+            pass1 = 2 * (a + b) + self.bm * self.bn * d.acc_bytes
+            pass2 = (gk * self.bm * self.bn * d.acc_bytes
+                     + 2 * self.bm * self.bn * d.dtype_bytes)
+            return max(pass1, pass2)
         if self.schedule == "k_inner":
             c = self.bm * self.bn * d.acc_bytes
         else:
@@ -200,6 +231,14 @@ def _schedule_traffic(d: MatmulDims, p: BlockPlan,
     b_elems = d.k * d.n
     c_elems = nb * d.m * d.n
     dt = d.dtype_bytes
+    if p.schedule == "splitk":
+        # A's k-slices are re-read per n-block; B exactly once; the fp32
+        # partial accumulator (gk, m, n) is written by pass 1 and read back
+        # by the reduction pass, then C written once at output width.
+        a_bytes = a_elems * gn * dt
+        b_bytes = b_elems * dt
+        c_bytes = 2 * gk * c_elems * d.acc_bytes + c_elems * dt
+        return a_bytes + b_bytes + c_bytes
     if p.schedule == "a_resident":
         a_bytes = a_elems * dt
         b_bytes = b_elems * gm * nb * dt
@@ -236,7 +275,16 @@ def cost_matmul(d: MatmulDims, p: BlockPlan,
     # the MXU issues a full 128-row pass regardless, so row-underfill is an
     # additional multiplicative loss.
     row_fill = min(1.0, pbm / chip.mxu_lanes)
-    eff_peak = hw.peak_flops(chip, d.dtype_bytes) * max(row_fill, 1.0 / chip.mxu_lanes * 8)
+    if p.schedule == "splitk":
+        # K-parallelism substitutes for row fill: gk partial products run
+        # concurrently across the tile fabric at the chip's GEMV efficiency,
+        # discounted Amdahl-style for the serial tree reduce.  (The reduce
+        # adds (gk-1)*m*n flops — negligible against 2*m*k*n for k >> gk.)
+        frac = min(1.0, chip.gemv_splitk_frac * gk / (gk + 1))
+        eff_peak = hw.peak_flops(chip, d.dtype_bytes) * frac
+    else:
+        eff_peak = hw.peak_flops(chip, d.dtype_bytes) * max(
+            row_fill, 1.0 / chip.mxu_lanes * 8)
     compute_s = padded_flops / eff_peak
     mxu_utilization = d.flops / padded_flops
 
@@ -245,8 +293,11 @@ def cost_matmul(d: MatmulDims, p: BlockPlan,
     hbm_bytes = _schedule_traffic(deff, p, gm, gn, gk)
     memory_s = hbm_bytes / chip.hbm_bw
 
-    # ---- grid overhead: the "vertex count" term.
+    # ---- grid overhead: the "vertex count" term.  splitk pays the partial
+    # pass plus one reduce step per output block.
     steps = nb * gm * gn * gk
+    if p.schedule == "splitk":
+        steps += nb * gm * gn
     overhead_s = steps * chip.grid_step_overhead_s
 
     return MatmulCost(

@@ -42,6 +42,15 @@ class ChipSpec:
     # cache-budgeted GPUs pay the most.  Regular-structure grouped
     # (block-diagonal) kernels do not pay it.
     sparse_gather_frac: float = 0.7
+    # Achieved fraction of peak compute for the split-K GEMV family: tiny-m
+    # GEMMs re-expressed as K-parallel partial products plus a tree
+    # reduction.  The systolic array still runs a sublane-high operand, but
+    # spreading K across the grid recovers the tile/vertex parallelism the
+    # M dimension cannot feed (Jia et al. 2019's reduction-tree reading of
+    # the IPU fabric).  Uniform-latency SRAM chips recover the most; HBM
+    # chips are memory-bound at these shapes anyway, so the knob rarely
+    # decides for them.
+    gemv_splitk_frac: float = 0.25
 
 
 # ----------------------------------------------------------------- registry
@@ -88,6 +97,7 @@ TPU_V5E = register_chip(ChipSpec(
     # amp * vmem_bytes of it (AMP = the paper's availableMemoryProportion knob).
     vmem_bytes=64 * 1024**2,
     sparse_gather_frac=0.7,
+    gemv_splitk_frac=0.25,
 ), aliases=("v5e",))
 
 # The paper's chips, kept for the comparison benchmarks (modeled numbers).
@@ -103,6 +113,10 @@ IPU_GC200 = register_chip(ChipSpec(
     # PopSparse's observation that the IPU tolerates sparsity at much
     # higher density than cache-hierarchy devices.
     sparse_gather_frac=0.9,
+    # 1472 tiles of uniform-latency SRAM: split-K partials land on-chip and
+    # the AMP decomposition already expresses K-parallel vertex trees, so
+    # the GEMV family recovers most of the fabric at m of a few rows.
+    gemv_splitk_frac=0.6,
 ), aliases=("gc200",))
 
 GPU_A30 = register_chip(ChipSpec(
@@ -117,6 +131,7 @@ GPU_A30 = register_chip(ChipSpec(
     vmem_bytes=24 * 1024**2,
     grid_step_overhead_s=0.0,
     sparse_gather_frac=0.6,
+    gemv_splitk_frac=0.35,
 ), aliases=("a30",))
 
 # The paper's GPU baseline for the skew comparison (Fig. 5): turing-class
@@ -137,6 +152,7 @@ GPU_RTX2080TI = register_chip(ChipSpec(
     # zoo; the modeled crossover d* also depends on how memory-bound the
     # dense baseline is, so it is not ordered by this knob alone).
     sparse_gather_frac=0.55,
+    gemv_splitk_frac=0.35,
 ), aliases=("rtx2080ti", "rtx_2080ti"))
 
 

@@ -32,8 +32,8 @@ import math
 from typing import Iterable
 
 from repro.core import config, hw
-from repro.core.costmodel import (SCHEDULES, BlockPlan, MatmulCost,
-                                  MatmulDims, cost_matmul)
+from repro.core.costmodel import (ALL_SCHEDULES, SCHEDULES, BlockPlan,
+                                  MatmulCost, MatmulDims, cost_matmul)
 
 
 def _round_up(a: int, b: int) -> int:
@@ -94,6 +94,45 @@ def _search(d: MatmulDims, chip: hw.ChipSpec, budget: int,
     return best
 
 
+def gemv_applicable(m: int, batch: int, chip: hw.ChipSpec) -> bool:
+    """Whether the split-K GEMV family joins the search for this shape.
+
+    Only plain 2-D contractions (batch folds would need the batched kernel
+    to learn the two-pass dispatch) whose row count can't fill the MXU
+    lanes — the decode regime.  Above that, row fill makes every dense
+    schedule strictly better at equal traffic, so searching would only
+    cost planning time.
+    """
+    return batch == 1 and m < chip.mxu_lanes
+
+
+def _gemv_costs(d: MatmulDims, chip: hw.ChipSpec,
+                budget: int) -> Iterable[MatmulCost]:
+    """Split-K candidates: one sublane-padded m block, (bk, bn) aligned.
+
+    bm is always the whole (padded) row count — splitting m when m is a
+    handful of rows only shrinks row fill further.  The grid parallelism
+    comes from (k_splits, n) instead.
+    """
+    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+    bm = _round_up(d.m, sub)
+    for bk in _aligned_candidates(d.k, lane, 4096):
+        for bn in _aligned_candidates(d.n, lane, 4096):
+            p = BlockPlan(bm, bk, bn, schedule="splitk")
+            if p.vmem_bytes(d) > budget:
+                continue
+            yield cost_matmul(d, p, chip)
+
+
+def _search_gemv(d: MatmulDims, chip: hw.ChipSpec,
+                 budget: int) -> MatmulCost | None:
+    best: MatmulCost | None = None
+    for c in _gemv_costs(d, chip, budget):
+        if best is None or _plan_order(c) < _plan_order(best):
+            best = c
+    return best
+
+
 def _plan_order(c: MatmulCost) -> tuple:
     """Deterministic candidate ranking: modeled time, then grid steps,
     then the `_search` encounter order (schedule-family position, blocks
@@ -101,7 +140,7 @@ def _plan_order(c: MatmulCost) -> tuple:
     is exactly the `_search` argmin even on exact cost ties."""
     p = c.plan
     return (c.total_s, c.grid_steps, p.batch_grid,
-            SCHEDULES.index(p.schedule), p.bm, p.bk, p.bn)
+            ALL_SCHEDULES.index(p.schedule), p.bm, p.bk, p.bn)
 
 
 def enumerate_plans(m: int, k: int, n: int, *, dtype_bytes: int = 2,
@@ -125,6 +164,10 @@ def enumerate_plans(m: int, k: int, n: int, *, dtype_bytes: int = 2,
     if batch > 1:
         costs.extend(
             _feasible_costs(d, chip, budget, ("k_inner",), batch_grid=True))
+    if gemv_applicable(m, batch, chip):
+        # Decode-shape candidates: the measured tuner times split-K plans
+        # against the dense family on equal footing.
+        costs.extend(_gemv_costs(d, chip, budget))
     if not costs:
         costs = [cost_matmul(d, BlockPlan(chip.mxu_sublanes, chip.mxu_lanes,
                                           chip.mxu_lanes), chip)]
@@ -147,7 +190,13 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
     mode:
       "skew_aware" — full (schedule x block) search, the paper-adapted
                      contribution.  With batch > 1 it additionally weighs
-                     folding the batch into m against a batch-grid plan.
+                     folding the batch into m against a batch-grid plan; at
+                     decode shapes (2-D, m below the MXU row granularity)
+                     the split-K GEMV family joins the search and wins
+                     exactly when its modeled cost does.
+      "dense"      — the search restricted to the dense schedule family
+                     (no GEMV candidates), kept so benchmarks can report
+                     the family-switch gain at the m-tail.
       "k_inner"    — the search restricted to the legacy K-innermost
                      schedule (the pre-schedule-family planner), kept so the
                      benchmarks can report the schedule-diversity gap.
@@ -211,6 +260,14 @@ def _plan_matmul_cached(m: int, k: int, n: int, *, dtype_bytes: int,
 
     schedules = ("k_inner",) if mode == "k_inner" else SCHEDULES
     best = _search(d, chip, budget, schedules)
+    if mode == "skew_aware" and gemv_applicable(m, batch, chip):
+        # Family switch: the split-K GEMV argmin competes with the dense
+        # argmin under `_plan_order`, so it wins iff its modeled cost does
+        # (dense wins exact ties — GEMV sits after SCHEDULES in the order).
+        gemv = _search_gemv(d, chip, budget)
+        if gemv is not None and (
+                best is None or _plan_order(gemv) < _plan_order(best)):
+            best = gemv
     if batch > 1:
         # The batched-grid kernel is K-inner only (batch rides a leading
         # parallel grid dim); residency schedules always fold.  The merge

@@ -32,6 +32,7 @@ from repro.core.planner import plan_matmul
 from repro.guard import fallback as _guard
 from repro.guard import validate as _validate
 from repro.kernels import flash_attention as _fa
+from repro.kernels import gemv_splitk as _gemv
 from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rglru
 from repro.kernels import skew_matmul as _mm
@@ -114,6 +115,20 @@ def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
         bm = min(p.bm, -(-m // 8) * 8)
         bk = min(p.bk, -(-k // 128) * 128)
         bn = min(p.bn, -(-n // 128) * 128)
+        if p.schedule == "splitk":
+            # The GEMV family: m is never blocked (the whole padded row
+            # count rides in every block), so only pad to (pbm, bk)/(bk, bn)
+            # and dispatch the two-pass split-K kernel.
+            pbm = -(-m // 8) * 8
+            ap = _pad_to(a, (pbm, bk))
+            bp = _pad_to(b, (bk, bn))
+            biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
+            resp = (None if ep.residual is None
+                    else _pad_to(ep.residual, (pbm, bn)))
+            out = _gemv.gemv_splitk_padded(ap, bp, biasp, resp, bk=bk, bn=bn,
+                                           epilogue=ep.spec, out_dtype=odt,
+                                           interpret=itp)
+            return out[:m, :n]
         ap = _pad_to(a, (bm, bk))
         bp = _pad_to(b, (bk, bn))
         biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))

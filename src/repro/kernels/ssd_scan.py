@@ -64,7 +64,8 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref, *,
 
     y_ref[0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
 
-    # --- state update: state' = e^{cum_last} state + sum_j e^{cum_last-cum_j} B_j (x dt)_j
+    # --- state update:
+    # state' = e^{cum_last} state + sum_j e^{cum_last-cum_j} B_j (x dt)_j
     last = cum[chunk - 1]
     b_decay = bm * jnp.exp(last - cum)[:, None]      # (Q, S)
     state_ref[...] = state_ref[...] * jnp.exp(last) + jax.lax.dot_general(

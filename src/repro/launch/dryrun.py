@@ -201,9 +201,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
     with open(path, "w") as f:
         json.dump(rec, f, indent=2, default=float)
+    mem_gib = (
+        rec["arg_bytes_per_device"] + rec["temp_bytes_per_device"]
+    ) / 2**30
     print(f"[dryrun] {arch} {shape_name} {mesh_kind}: "
           f"compile={t_compile:.1f}s "
-          f"mem/dev={(rec['arg_bytes_per_device'] + rec['temp_bytes_per_device']) / 2**30:.2f}GiB "
+          f"mem/dev={mem_gib:.2f}GiB "
           f"dominant={rec['dominant']} frac={rec['roofline_fraction']:.3f}")
     return rec
 

@@ -31,6 +31,7 @@ from repro.serve.sched import (
     modeled_step_seconds,
     scripted_trace,
 )
+from repro.serve.sched.buckets import decode_gemm_specs, gemv_decode_coverage
 from repro.tune import runtime as tune_runtime
 
 
@@ -56,6 +57,19 @@ def main(argv=None) -> int:
     ap.add_argument("--max-prompt", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode-scale", action="store_true",
+                    help="with --tiny: widen the reduced config to "
+                         "decode-scale weights (K >= 1024) so decode "
+                         "GEMMs sit in the GEMV regime — the reduced "
+                         "shapes are grid-overhead-bound and every chip "
+                         "correctly stays dense on them")
+    ap.add_argument("--expect-gemv", action="store_true",
+                    help="assert decode steps resolve measured split-K "
+                         "(GEMV) tuned-cache entries — exits non-zero if "
+                         "no decode class tuned to the split-K family or "
+                         "no split-K plan was hit during the run (pair "
+                         "with --decode-scale: the reduced shapes are "
+                         "grid-overhead-bound and stay dense)")
     mmcfg.add_cli_args(ap)
     args = ap.parse_args(argv)
 
@@ -63,6 +77,12 @@ def main(argv=None) -> int:
     if args.tiny:
         cfg = cfg.reduced()
         args.requests = min(args.requests, 8)
+    if args.decode_scale:
+        # Decode-scale weights on the reduced layer count: K >= 1024 puts
+        # the decode-step GEMMs inside the GEMV regime (the reduced dims
+        # are one grid step for *any* schedule, so dense correctly wins
+        # there and --expect-gemv could never pass).
+        cfg = cfg.decode_scale()
     bundle = build_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
 
@@ -77,6 +97,11 @@ def main(argv=None) -> int:
         assert_covered(cache, specs)
         print(f"[serve_bench] {args.arch}: {len(specs)} GEMM shape classes, "
               f"{len(cache.entries)} tuned entries")
+        cov = gemv_decode_coverage(cache, decode_gemm_specs(params, cfg,
+                                                            table))
+        print(f"[serve_bench] decode classes: {cov['decode_classes']} "
+              f"({cov['gemv_classes']} split-K, "
+              f"{cov['dense_classes']} dense)")
 
         trace = build_trace(args, cfg)
         health.reset()
@@ -89,7 +114,9 @@ def main(argv=None) -> int:
         print(f"[serve_bench] {line}")
         snap = health.snapshot()
         hits, misses = snap.get("tuned_hits", 0), snap.get("tuned_misses", 0)
-        print(f"[serve_bench] tuned lookups: {hits} hits, {misses} misses")
+        gemv_hits = snap.get("tuned_hits_gemv", 0)
+        print(f"[serve_bench] tuned lookups: {hits} hits, {misses} misses "
+              f"({gemv_hits} split-K)")
         if snap.get("moe_slots_total"):
             util = snap["moe_slots_filled"] / snap["moe_slots_total"]
             print(f"[serve_bench] moe capacity-slot utilization: {util:.3f} "
@@ -114,6 +141,16 @@ def main(argv=None) -> int:
         print("[serve_bench] ERROR: tuned lookups missed — bucket table "
               "does not cover the served shapes")
         return 1
+    if args.expect_gemv:
+        if not cov["gemv_classes"]:
+            print("[serve_bench] ERROR: --expect-gemv but no decode class "
+                  "tuned to the split-K family (wrong --chip? HBM chips "
+                  "stay dense)")
+            return 1
+        if not gemv_hits:
+            print("[serve_bench] ERROR: --expect-gemv but no split-K "
+                  "tuned-cache entry was resolved during the run")
+            return 1
     return 0
 
 

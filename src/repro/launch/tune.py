@@ -14,6 +14,10 @@ Suites:
             tractable; shape classes are bucketed, so small
             representatives still answer their whole class.
   sparse  — block-sparse layouts at two densities on the same scale.
+  decode  — the GEMV decode classes (m in {1, 4, 8} exact against a
+            K = N = ``--total`` weight): candidate sets include the
+            split-K family, so on chips where it wins (--chip ipu_gc200)
+            the cached winners are measured split-K plans.
 
 ``--budget-s`` bounds wall time: at least one shape is always tuned,
 and the loop stops at the first shape that would exceed the budget.
@@ -38,9 +42,10 @@ from repro.sparse.layout import BlockSparseLayout
 from repro.tune import calibrate
 from repro.tune.cache import TuneCache
 from repro.tune.runtime import default_cache_path
+from repro.tune.shapeclass import decode_classes
 from repro.tune.tuner import tune_dense, tune_sparse
 
-SUITES = ("fig5", "sparse")
+SUITES = ("fig5", "sparse", "decode")
 
 # The fig5 aspect-ratio axis, power-of-two so shape classes map to
 # themselves (tuning representatives, not neighbors).
@@ -97,6 +102,9 @@ def main(argv=None) -> int:
               f"budget={args.budget_s:g}s -> {cache_path}")
         if args.suite == "fig5":
             work = [("dense", s) for s in _fig5_shapes(args.total)]
+        elif args.suite == "decode":
+            work = [("dense", cls.dims)
+                    for cls in decode_classes(args.total, args.total)]
         else:
             work = [("sparse", d) for d in SPARSE_DENSITIES]
         for i, (kind, item) in enumerate(work):
@@ -130,14 +138,29 @@ def main(argv=None) -> int:
         if chip_entries:
             corr = calibrate.fit_corrections(chip_entries, chip)
             cache.corrections[chip.name] = corr.to_json()
-            corrected = calibrate.apply_corrections(chip, corr)
             gather = ("datasheet" if corr.sparse_gather_frac is None
                       else f"{corr.sparse_gather_frac:g}")
-            print(f"# calibration {chip.name}: time_frac={corr.time_frac:g} "
-                  f"sparse_gather_frac={gather} "
-                  f"(n_dense={corr.n_dense} n_sparse={corr.n_sparse}) -> "
-                  f"corrected peak {corrected.peak_bf16_flops / 1e12:.1f} "
-                  f"TFLOP/s; absorb via hw.register_chip")
+            if corr.accepted:
+                corrected = calibrate.apply_corrections(chip, corr)
+                print(f"# calibration {chip.name}: "
+                      f"time_frac={corr.time_frac:g} "
+                      f"sparse_gather_frac={gather} "
+                      f"(n_dense={corr.n_dense} n_sparse={corr.n_sparse}) -> "
+                      f"corrected peak "
+                      f"{corrected.peak_bf16_flops / 1e12:.1f} "
+                      f"TFLOP/s; absorb via hw.register_chip")
+            else:
+                # The quality gate (calibrate.MAX_LOG_SPREAD) tripped: the
+                # fit is recorded in the cache for inspection, but
+                # apply_corrections would refuse it — say so instead of
+                # previewing a corrected spec.
+                import math as _math
+                print(f"# calibration {chip.name}: REJECTED "
+                      f"(cross-shape spread "
+                      f"{_math.exp(corr.log_spread):.2f}x > "
+                      f"{_math.exp(calibrate.MAX_LOG_SPREAD):.0f}x, "
+                      f"n_dense={corr.n_dense}); corrections recorded but "
+                      f"not absorbable")
 
     agree = sum(1 for e in entries if e.agreement)
     print(f"# tuned {len(entries)} shape classes; "

@@ -212,6 +212,80 @@ def capture_gemm_specs(
     return list(specs)
 
 
+def decode_gemm_specs(
+    params, cfg: ModelConfig, table: BucketTable
+) -> list[GemmSpec]:
+    """The planned GEMMs of the *decode step only*, per batch bucket.
+
+    The decode m-tail of `capture_gemm_specs`: every dense spec here has
+    m = a batch bucket (a handful of rows) — the shapes whose tuned
+    entries should be measured split-K plans on chips where the GEMV
+    family's modeled cost wins.  Used by the decode-smoke gate and the
+    `--expect-gemv` serving CLI assertion.
+    """
+    from repro.serve import engine
+
+    specs: dict[GemmSpec, None] = {}
+    for bb in table.batch_buckets:
+        with skewmm.plan_capture() as log:
+            cache = jax.eval_shape(
+                lambda: kvcache.init_cache(cfg, bb, table.max_len)
+            )
+            jax.eval_shape(
+                lambda c, t, p: engine.decode_step(params, cfg, c, t, p)[0],
+                cache,
+                jax.ShapeDtypeStruct((bb,), jnp.int32),
+                jax.ShapeDtypeStruct((bb,), jnp.int32),
+            )
+        for cost in log:
+            spec = _spec_of(cost)
+            if spec is not None:
+                specs[spec] = None
+    return list(specs)
+
+
+def gemv_decode_coverage(
+    cache: tune_cache.TuneCache,
+    specs: list[GemmSpec],
+    *,
+    chip=None,
+    amp: float | None = None,
+) -> dict:
+    """How the decode-step GEMMs resolve in a tuned cache, by family.
+
+    Returns integer counters (all deterministic, benchable exact):
+      decode_classes — distinct dense shape classes in the GEMV decode
+                       regime (`ShapeClass.is_decode`) among `specs`;
+      gemv_classes   — how many of those resolve to a split-K entry;
+      dense_classes  — how many resolve to a dense-schedule entry.
+    On chips where the split-K family's modeled cost wins at tiny m (the
+    IPU), gemv_classes == decode_classes; HBM chips stay dense.
+    """
+    resolved = mmcfg.resolve(amp=amp, chip=chip)
+    chip_name, amp_val = resolved.chip_spec.name, resolved.amp
+    classes: dict[str, tune_cache.TuneEntry | None] = {}
+    for spec in specs:
+        if spec[0] != "dense":
+            continue
+        _, m, k, n, batch, db = spec
+        cls = ShapeClass.of(m, k, n, batch)
+        if not cls.is_decode:
+            continue
+        key = tune_cache.dense_key(chip_name, db, amp_val, cls)
+        classes[key] = cache.get(key)
+    gemv = sum(
+        1 for e in classes.values() if e is not None and e.schedule == "splitk"
+    )
+    dense = sum(
+        1 for e in classes.values() if e is not None and e.schedule != "splitk"
+    )
+    return {
+        "decode_classes": len(classes),
+        "gemv_classes": gemv,
+        "dense_classes": dense,
+    }
+
+
 def modeled_step_seconds(
     params,
     cfg: ModelConfig,

@@ -23,21 +23,38 @@ hosts that never ran the tuner.
 Every factor is clamped into (0, 1] (`unit_clamp`): a host can be
 arbitrarily slower than the model but never credited as faster than the
 roofline — hypothesis-tested for any positive ratio input.
+
+Quality gate: a single scalar `time_frac` is only meaningful when the
+per-entry ratios it averages agree with each other.  `fit_corrections`
+records the cross-shape residual spread (`log_spread` — the worst
+entry's log-distance from the geomean) and marks the fit rejected when
+it exceeds `MAX_LOG_SPREAD`; `apply_corrections` *refuses* a rejected
+fit, so noisy hosts can never auto-register a corrected `ChipSpec`.
+Rejections are ledgered through `guard.health`
+("calibration_rejected") and warned about at fit time.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Iterable, Mapping
 
 from repro.bench.record import SchemaError
 from repro.core import hw
+from repro.guard import health as _health
 from repro.tune.cache import TuneEntry
 
 # Floor of the (0, 1] clamp: keeps fitted factors strictly positive so a
 # corrected ChipSpec never has a zero peak (division by achieved rate).
 UNIT_FLOOR = 1e-6
+
+# Reject a fit when any dense/grouped entry's modeled/measured ratio sits
+# more than 4x (in either direction) off the fitted geomean: a scalar
+# efficiency cannot describe a host whose shapes disagree that much —
+# applying it would miscalibrate every shape but the average one.
+MAX_LOG_SPREAD = math.log(4.0)
 
 
 def unit_clamp(x: float) -> float:
@@ -63,13 +80,21 @@ def _geomean(values: list[float]) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class Corrections:
-    """Fitted per-chip correction factors (all in (0, 1])."""
+    """Fitted per-chip correction factors (all in (0, 1]).
+
+    `log_spread` is the fit's quality metric (worst dense/grouped
+    entry's |log(ratio) - log(geomean)|); `accepted` records whether it
+    passed `MAX_LOG_SPREAD` — a rejected fit is carried in the cache for
+    inspection but `apply_corrections` refuses to absorb it.
+    """
 
     chip: str
     time_frac: float
     sparse_gather_frac: float | None
     n_dense: int
     n_sparse: int
+    log_spread: float = 0.0
+    accepted: bool = True
 
     def __post_init__(self):
         if not 0.0 < self.time_frac <= 1.0:
@@ -77,6 +102,8 @@ class Corrections:
         g = self.sparse_gather_frac
         if g is not None and not 0.0 < g <= 1.0:
             raise ValueError(f"sparse_gather_frac outside (0, 1]: {g}")
+        if not (math.isfinite(self.log_spread) and self.log_spread >= 0.0):
+            raise ValueError(f"log_spread must be >= 0: {self.log_spread}")
 
     def to_json(self) -> dict[str, Any]:
         return dataclasses.asdict(self)
@@ -134,12 +161,31 @@ def fit_corrections(
         gather = fit_gather_frac(
             spec.sparse_gather_frac, [r / time_frac for r in sparse_r]
         )
+    # Fit residual / cross-shape spread: the worst entry's log-distance
+    # from the geomean.  A scalar time_frac only describes the host when
+    # the shapes agree; beyond MAX_LOG_SPREAD the fit is marked rejected.
+    log_spread = 0.0
+    if len(dense_r) > 1:
+        center = math.log(_geomean(dense_r))
+        log_spread = max(abs(math.log(r) - center) for r in dense_r)
+    accepted = log_spread <= MAX_LOG_SPREAD
+    if not accepted:
+        _health.record("calibration_rejected")
+        warnings.warn(
+            f"calibration fit for {spec.name} rejected: cross-shape "
+            f"spread {math.exp(log_spread):.2f}x exceeds "
+            f"{math.exp(MAX_LOG_SPREAD):.0f}x "
+            f"(n_dense={len(dense_r)}); corrections will not be absorbed",
+            stacklevel=2,
+        )
     return Corrections(
         chip=spec.name,
         time_frac=time_frac,
         sparse_gather_frac=gather,
         n_dense=len(dense_r),
         n_sparse=len(sparse_r),
+        log_spread=log_spread,
+        accepted=accepted,
     )
 
 
@@ -150,6 +196,12 @@ def apply_corrections(spec: hw.ChipSpec, corr: Corrections) -> hw.ChipSpec:
     if corr.chip != spec.name:
         raise ValueError(
             f"corrections fitted for {corr.chip!r}, spec is {spec.name!r}",
+        )
+    if not corr.accepted:
+        raise ValueError(
+            f"corrections for {corr.chip!r} were rejected at fit time "
+            f"(cross-shape spread {math.exp(corr.log_spread):.2f}x > "
+            f"{math.exp(MAX_LOG_SPREAD):.0f}x); refusing to absorb them",
         )
     kw: dict[str, Any] = {
         "peak_bf16_flops": spec.peak_bf16_flops * corr.time_frac,

@@ -127,7 +127,12 @@ def _count(entry) -> None:
     # Hit/miss ledger for the serving scheduler's coverage gate: under
     # plan_mode="tuned" the bucket table promises every scheduled GEMM
     # resolves in-cache, and the bench gates tuned_misses == 0 exact.
+    # Split-K hits are ledgered separately so the decode-smoke gate can
+    # assert GEMV classes are actually *active* (decode steps resolving
+    # measured split-K plans), not just covered.
     _health.record("tuned_hits" if entry is not None else "tuned_misses")
+    if entry is not None and entry.schedule == "splitk":
+        _health.record("tuned_hits_gemv")
 
 
 def lookup_dense(

@@ -73,3 +73,30 @@ class ShapeClass:
     def token(self) -> str:
         """Stable key fragment: ``m<M>k<K>n<N>b<B>``."""
         return f"m{self.m}k{self.k}n{self.n}b{self.batch}"
+
+    @property
+    def is_decode(self) -> bool:
+        """Whether this class sits in the GEMV decode regime: a plain 2-D
+        contraction with at most `GEMV_M_MAX` representative rows — the
+        shapes where the planner lets the split-K family join the search."""
+        return self.batch == 1 and self.m <= GEMV_M_MAX
+
+
+# The decode m-tail: batch buckets a continuous-batching decode step
+# actually issues (m = rows in flight).  These are *exact* classes —
+# each is a power of two, so `bucket_dim` maps it to itself and the
+# tuned-cache key for a decode step is the key tuned here (the partition
+# property is unchanged; hypothesis-tested).  m = 8 is the row-granule
+# boundary: one fp32 sublane, the last class before dense row fill
+# starts climbing.
+GEMV_M_CLASSES = (1, 4, 8)
+GEMV_M_MAX = 8
+
+
+def decode_classes(k: int, n: int, *, ms: tuple[int, ...] = GEMV_M_CLASSES,
+                   ) -> list[ShapeClass]:
+    """The decode-shape GEMV classes for one (K, N) weight: m in `ms`
+    (exact), K / N bucketed power-of-two.  This is the class list
+    `tune_decode` measures and `serve.sched.buckets` resolves decode
+    steps against."""
+    return [ShapeClass.of(m, k, n) for m in ms]

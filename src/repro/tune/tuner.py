@@ -35,7 +35,7 @@ from repro.sparse.costmodel import SparseMatmulCost, cost_sparse_matmul
 from repro.sparse.layout import BlockSparseLayout, LayoutSummary
 from repro.sparse.planner import enumerate_grouped_plans, enumerate_sparse_plans
 from repro.tune import cache as tune_cache
-from repro.tune.shapeclass import ShapeClass, bucket_dim
+from repro.tune.shapeclass import ShapeClass, bucket_dim, decode_classes
 from repro.bench.timing import Timing, measure
 
 Candidate = Any  # MatmulCost | SparseMatmulCost
@@ -235,6 +235,44 @@ def tune_dense(
         iters,
         repeats,
     )
+
+
+def tune_decode(
+    k: int,
+    n: int,
+    *,
+    dtype_bytes: int = 2,
+    amp: float | None = None,
+    chip: hw.ChipSpec | str | None = None,
+    top: int = 8,
+    iters: int = 1,
+    repeats: int = 3,
+    measurer: Measurer = wallclock_measurer,
+) -> list[tune_cache.TuneEntry]:
+    """Tune the decode-shape GEMV classes for one (K, N) weight.
+
+    One `tune_dense` run per m in `shapeclass.GEMV_M_CLASSES` (the
+    continuous-batching decode batch buckets; each class is exact).  The
+    candidate sets include the split-K GEMV family via `enumerate_plans`,
+    so on chips where the family's modeled cost wins (the IPU) the cached
+    winners are measured split-K plans — the entries `serve.sched` decode
+    steps resolve.
+    """
+    return [
+        tune_dense(
+            cls.m,
+            cls.k,
+            cls.n,
+            dtype_bytes=dtype_bytes,
+            amp=amp,
+            chip=chip,
+            top=top,
+            iters=iters,
+            repeats=repeats,
+            measurer=measurer,
+        )
+        for cls in decode_classes(k, n)
+    ]
 
 
 # ----------------------------------------------------------------- sparse

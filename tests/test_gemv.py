@@ -1,0 +1,234 @@
+"""Split-K GEMV family: planner switch, decode classes, kernel stability.
+
+The family-switch rule is a modeled argmin over the union of the dense
+and GEMV schedule families, so the planner tests assert the *iff*: the
+plan leaves the dense family exactly when the best split-K candidate
+out-ranks the best dense candidate.  The kernel tests pin the numeric
+contract that makes split count a pure performance knob: with exactly
+representable inputs the output is bitwise identical across split
+counts and to the XLA oracle.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hw, planner
+from repro.core.config import mm_config
+from repro.core.costmodel import BlockPlan
+from repro.core.epilogue import Epilogue
+from repro.core.planner import gemv_applicable, plan_matmul
+from repro.guard import health
+from repro.kernels import ops, ref
+from repro.kernels.gemv_splitk import gemv_splitk_padded, tree_sum
+from repro.tune import calibrate
+from repro.tune.cache import TuneEntry
+from repro.tune.shapeclass import (
+    GEMV_M_CLASSES,
+    GEMV_M_MAX,
+    ShapeClass,
+    decode_classes,
+)
+
+RNG = np.random.default_rng(7)
+
+# The decode tail's weight shape: the LM head of a ~4k-wide model (bf16).
+K_DEC, N_DEC = 4096, 32768
+
+
+# ------------------------------------------------------------- family switch
+@pytest.mark.parametrize("chip", ["ipu_gc200", "tpu_v5e", "gpu_rtx2080ti"])
+@pytest.mark.parametrize("m", [1, 2, 3, 4, 8, 16, 64, 256])
+def test_family_switch_iff_modeled_win(chip, m):
+    """The planner picks split-K exactly when its best candidate out-ranks
+    the best dense candidate — never on vibes, never when inapplicable."""
+    spec = hw.get_chip(chip)
+    planned = plan_matmul(m, K_DEC, N_DEC, dtype_bytes=2, chip=chip)
+    switched = planned.plan.schedule == "splitk"
+    if not gemv_applicable(m, 1, spec):
+        assert not switched
+        return
+    cands = planner.enumerate_plans(
+        m, K_DEC, N_DEC, dtype_bytes=2, chip=chip, top=256
+    )
+    gemv = [c for c in cands if c.plan.schedule == "splitk"]
+    dense = [c for c in cands if c.plan.schedule != "splitk"]
+    assert dense, "dense family always has the min-granule fallback"
+    should_switch = bool(gemv) and (
+        planner._plan_order(min(gemv, key=planner._plan_order))
+        < planner._plan_order(min(dense, key=planner._plan_order))
+    )
+    assert switched == should_switch
+    # enumerate_plans' head is the plan_matmul pick (documented contract).
+    assert cands[0].plan == planned.plan
+
+
+def test_gc200_switches_hbm_chips_stay_dense():
+    """The decode tail's verdict: uniform-latency SRAM keeps the m-tail
+    compute-bound (split-K's Amdahl win); HBM chips are bound streaming
+    B and gain nothing from splitting K."""
+    for m in GEMV_M_CLASSES:
+        ipu = plan_matmul(m, K_DEC, N_DEC, dtype_bytes=2, chip="ipu_gc200")
+        ipu_dense = plan_matmul(
+            m, K_DEC, N_DEC, dtype_bytes=2, chip="ipu_gc200", mode="dense"
+        )
+        assert ipu.plan.schedule == "splitk"
+        assert ipu.bound == "compute"
+        assert ipu_dense.total_s / ipu.total_s > 1.5
+        for chip in ("tpu_v5e", "gpu_rtx2080ti"):
+            c = plan_matmul(m, K_DEC, N_DEC, dtype_bytes=2, chip=chip)
+            assert c.plan.schedule != "splitk"
+            assert c.bound == "memory"
+
+
+def test_gemv_not_applicable_to_batched_or_wide():
+    spec = hw.get_chip("ipu_gc200")
+    assert gemv_applicable(1, 1, spec)
+    assert not gemv_applicable(1, 2, spec)
+    assert not gemv_applicable(spec.mxu_lanes, 1, spec)
+    c = plan_matmul(1, K_DEC, N_DEC, dtype_bytes=2, chip="ipu_gc200",
+                    batch=2)
+    assert c.plan.schedule != "splitk"
+
+
+def test_dense_mode_restricts_search():
+    """mode="dense" spans the dense family only — the bench's family-
+    switch comparison baseline."""
+    c = plan_matmul(1, K_DEC, N_DEC, dtype_bytes=2, chip="ipu_gc200",
+                    mode="dense")
+    assert c.plan.schedule != "splitk"
+
+
+# ------------------------------------------------------------ decode classes
+def test_decode_classes_are_fixed_points():
+    """GEMV buckets keep the partition exact: every decode class maps to
+    itself under ShapeClass.of, so tuning a class answers that class."""
+    for cls in decode_classes(K_DEC, N_DEC):
+        assert cls.m in GEMV_M_CLASSES
+        assert cls.is_decode
+        assert ShapeClass.of(*cls.dims, cls.batch) == cls
+
+
+def test_decode_partition_stays_exact():
+    """Bucketing is idempotent with the GEMV buckets in play, and the
+    is_decode predicate is a function of the class (not the raw dims)."""
+    for m in (1, 2, 3, 5, 8, 9, 17, 300):
+        for k, n in ((K_DEC, N_DEC), (1000, 3000)):
+            cls = ShapeClass.of(m, k, n)
+            assert ShapeClass.of(*cls.dims, cls.batch) == cls
+            assert cls.is_decode == (cls.m <= GEMV_M_MAX)
+
+
+def test_decode_classes_custom_ms():
+    ms = tuple(c.m for c in decode_classes(K_DEC, N_DEC, ms=(1, 2)))
+    assert ms == (1, 2)
+
+
+# -------------------------------------------------------------------- kernel
+def _int_arr(shape, lo=-8, hi=8):
+    """Integer-valued fp32: exactly representable, so any summation order
+    yields the same floats and bitwise comparison is meaningful."""
+    return jnp.asarray(RNG.integers(lo, hi, size=shape), jnp.float32)
+
+
+def test_splitk_bitwise_stable_across_split_counts():
+    m, k, n = 8, 256, 128
+    a, b = _int_arr((m, k)), _int_arr((k, n))
+    want = np.asarray(jnp.matmul(a, b))
+    outs = [
+        np.asarray(
+            gemv_splitk_padded(a, b, bk=bk, bn=128, interpret=True)
+        )
+        for bk in (32, 64, 128, 256)
+    ]
+    for got in outs:
+        # Bitwise, not allclose: the tree reduce must make the split
+        # count invisible, and integer-valued inputs leave no rounding
+        # excuse.
+        np.testing.assert_array_equal(got, want)
+
+
+def test_splitk_dispatch_matches_oracle_unaligned():
+    """ops.skew_matmul routes a splitk plan through pad/slice; epilogue
+    applied once after the final reduce."""
+    m, k, n = 5, 384, 200
+    a = jnp.asarray(RNG.normal(size=(m, k)) * 0.3, jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(k, n)) * 0.3, jnp.float32)
+    bias = jnp.asarray(RNG.normal(size=(n,)), jnp.float32)
+    resid = jnp.asarray(RNG.normal(size=(m, n)), jnp.float32)
+    plan = BlockPlan(bm=8, bk=128, bn=128, schedule="splitk")
+    ep = Epilogue(act="silu", bias=bias, residual=resid)
+    got = ops.skew_matmul(a, b, plan=plan, epilogue=ep)
+    want = ref.matmul_epilogue_ref(a, b, epilogue=ep)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=1e-4)
+
+
+def test_splitk_out_dtype():
+    a, b = _int_arr((8, 128)), _int_arr((128, 128))
+    got = gemv_splitk_padded(a, b, bk=64, bn=128,
+                             out_dtype=jnp.bfloat16, interpret=True)
+    assert got.dtype == jnp.bfloat16
+
+
+@pytest.mark.parametrize("parts", [1, 2, 3, 5, 8])
+def test_tree_sum_matches_sum(parts):
+    x = jnp.asarray(RNG.normal(size=(parts, 4, 6)), jnp.float32)
+    np.testing.assert_allclose(
+        tree_sum(x), jnp.sum(x, axis=0), rtol=1e-6, atol=1e-6
+    )
+
+
+# -------------------------------------------------------- calibration gate
+def _cal_entry(key, measured, modeled, chip="tpu_v5e"):
+    return TuneEntry(
+        key=key, kind="dense", chip=chip, dtype_bytes=2, amp=0.45,
+        schedule="k_inner", blocks=(256, 256, 256), batch_grid=False,
+        measured_us=measured, modeled_us=modeled,
+        modeled_best_schedule="k_inner",
+        modeled_best_blocks=(256, 256, 256),
+        modeled_best_measured_us=measured, agreement=True, speedup=1.0,
+        provenance={"git_sha": "abc", "jax_version": "0", "iters": 1,
+                    "repeats": 1, "created_utc": "t"})
+
+
+def test_calibration_accepts_consistent_ratios():
+    entries = [
+        _cal_entry("dense/tpu_v5e/dt2/amp0.45/m256k256n256b1", 20.0, 10.0),
+        _cal_entry("dense/tpu_v5e/dt2/amp0.45/m64k64n64b1", 24.0, 10.0),
+    ]
+    corr = calibrate.fit_corrections(entries, "tpu_v5e")
+    assert corr.accepted
+    assert corr.log_spread < calibrate.MAX_LOG_SPREAD
+    spec = calibrate.apply_corrections(hw.get_chip("tpu_v5e"), corr)
+    assert spec.peak_bf16_flops < hw.get_chip("tpu_v5e").peak_bf16_flops
+
+
+def test_calibration_rejects_wild_spread():
+    """Ratios 20x apart: a scalar time_frac describes neither shape, so
+    the fit is recorded but must never auto-register a corrected chip."""
+    entries = [
+        _cal_entry("dense/tpu_v5e/dt2/amp0.45/m256k256n256b1", 10.0, 10.0),
+        _cal_entry("dense/tpu_v5e/dt2/amp0.45/m64k64n64b1", 200.0, 10.0),
+    ]
+    health.reset()
+    try:
+        with pytest.warns(UserWarning, match="rejected"):
+            corr = calibrate.fit_corrections(entries, "tpu_v5e")
+        assert not corr.accepted
+        assert corr.log_spread > calibrate.MAX_LOG_SPREAD
+        assert health.get("calibration_rejected") == 1
+    finally:
+        health.reset()
+    with pytest.raises(ValueError, match="refusing to absorb"):
+        calibrate.apply_corrections(hw.get_chip("tpu_v5e"), corr)
+
+
+def test_calibration_gate_roundtrips():
+    corr = calibrate.Corrections(
+        chip="tpu_v5e", time_frac=0.5, sparse_gather_frac=None,
+        n_dense=2, n_sparse=0, log_spread=math.log(5.0), accepted=False)
+    back = calibrate.Corrections.from_json(corr.to_json())
+    assert back == corr
