@@ -1,70 +1,145 @@
-"""Merge results/dryrun + results/roofline JSONs into markdown tables
-(consumed by EXPERIMENTS.md).
+"""Render benchmark run documents as markdown (plus trace summaries).
 
-    PYTHONPATH=src python -m benchmarks.report
+    PYTHONPATH=src python -m benchmarks.report BENCH_<ts>.json
+    PYTHONPATH=src python -m benchmarks.report BENCH_<ts>.json \
+        --baseline benchmarks/baselines --trace run.trace.json
+
+One table per suite: record name, median wall time, the deterministic
+metrics, and the provenance fragments worth a column — guard percentile
+fields (``*_p50/_p95/_p99`` from the unified metrics registry) and the
+span-kind trace digest when the run was captured inside an armed
+``repro.obs.trace_scope``.  ``--baseline`` appends the tolerance-gated
+diff (same comparator CI runs); ``--trace`` appends a span-kind /
+category summary of a Chrome-trace JSON written by ``--trace`` on
+`benchmarks/run.py`, `repro.launch.serve_bench` or `repro.launch.trace`.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
-import os
 
-ROOT = os.path.join(os.path.dirname(__file__), "..", "results")
-
-
-def _load(subdir: str) -> dict[tuple, dict]:
-    out = {}
-    d = os.path.join(ROOT, subdir)
-    if not os.path.isdir(d):
-        return out
-    for name in sorted(os.listdir(d)):
-        if not name.endswith(".json"):
-            continue
-        arch, shape, mesh = name[:-5].split("__")
-        with open(os.path.join(d, name)) as f:
-            out[(arch, shape, mesh)] = json.load(f)
-    return out
+from repro.bench import io as bench_io
+from repro.bench.compare import compare
 
 
-def dryrun_table() -> str:
-    rows = _load("dryrun")
-    lines = ["| arch | shape | mesh | compile_s | bytes/device | "
-             "collectives (per scan-iteration schedule) |",
-             "|---|---|---|---|---|---|"]
-    for (arch, shape, mesh), r in rows.items():
-        mem = (r["arg_bytes_per_device"] + r["temp_bytes_per_device"]) / 2**30
-        coll = ",".join(f"{k}:{v}" for k, v in
-                        sorted(r.get("collective_counts", {}).items()))
-        lines.append(f"| {arch} | {shape} | {mesh} | "
-                     f"{r.get('compile_s', 0):.0f} | {mem:.2f} GiB | "
-                     f"{coll} |")
+def _fmt(v: float) -> str:
+    if v != v:  # NaN
+        return "-"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return f"{v:.4g}"
+
+
+def _digest_cell(record) -> str:
+    digest = record.provenance.trace_digest
+    if not digest:
+        return ""
+    return "/".join(f"{k}:{v}" for k, v in sorted(digest.items()))
+
+
+def suite_table(suite: str, records) -> str:
+    lines = [f"### suite `{suite}`", ""]
+    header = "| record | us/call | metrics | trace |"
+    lines += [header, "|---|---|---|---|"]
+    for r in records:
+        us = "-" if r.us_per_call is None else f"{r.us_per_call:.1f}"
+        metrics = ", ".join(
+            f"{k}={_fmt(v)}" for k, v in sorted(r.metrics.items())
+        )
+        lines.append(f"| {r.name} | {us} | {metrics} | {_digest_cell(r)} |")
     return "\n".join(lines)
 
 
-def roofline_table(mesh: str = "pod") -> str:
-    rows = _load("roofline")
-    lines = ["| arch | shape | compute_s | memory_s | collective_s | "
-             "dominant | MODEL/HLO | roofline frac |",
-             "|---|---|---|---|---|---|---|---|"]
-    for (arch, shape, m), r in rows.items():
-        if m != mesh:
-            continue
-        lines.append(
-            f"| {arch} | {shape} | {r['compute_s'] * 1e3:.2f}ms | "
-            f"{r['memory_s'] * 1e3:.2f}ms | "
-            f"{r['collective_s'] * 1e3:.2f}ms | {r['dominant']} | "
-            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+def guard_table(records) -> str:
+    """Records that ran on a degraded or instrumented process: the guard
+    provenance fragment, including the histogram percentiles the
+    unified registry exports (satellite: p50/p95/p99 surfaced)."""
+    rows = [(r, r.provenance.guard) for r in records if r.provenance.guard]
+    if not rows:
+        return ""
+    lines = ["### guard / metrics provenance", "",
+             "| record | counters and percentiles |", "|---|---|"]
+    for r, g in rows:
+        cell = ", ".join(f"{k}={_fmt(float(v))}" for k, v in sorted(g.items()))
+        lines.append(f"| {r.name} | {cell} |")
     return "\n".join(lines)
 
 
-def main():
-    print("## Dry-run table\n")
-    print(dryrun_table())
-    print("\n## Roofline table (single-pod)\n")
-    print(roofline_table("pod"))
-    print("\n## Roofline table (multi-pod)\n")
-    print(roofline_table("multipod"))
+def trace_summary(path: str) -> str:
+    """Span-kind counts + attributed-dispatch tally of a Chrome trace."""
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents", [])
+    by_cat: dict[str, int] = {}
+    attributed = 0
+    modeled_total = 0.0
+    for ev in events:
+        cat = ev.get("cat", "?")
+        by_cat[cat] = by_cat.get(cat, 0) + 1
+        args = ev.get("args", {})
+        if cat == "dispatch" and args.get("modeled_us") is not None:
+            if args.get("measured_us") is not None:
+                attributed += 1
+            modeled_total += float(args["modeled_us"])
+    lines = [f"### trace `{path}`", "",
+             "| category | events |", "|---|---|"]
+    for cat, n in sorted(by_cat.items()):
+        lines.append(f"| {cat} | {n} |")
+    lines.append("")
+    lines.append(
+        f"{len(events)} events; {attributed} dispatches carry the full "
+        f"modeled/measured attribution pair; modeled dispatch total "
+        f"{modeled_total:.1f}us."
+    )
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("run", help="BENCH_<ts>.json run document")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="append the tolerance-gated diff against the "
+                         "committed baselines")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append a span summary of this Chrome-trace JSON")
+    args = ap.parse_args(argv)
+
+    meta, records = bench_io.read_run(args.run)
+    print(f"## bench report — {args.run}")
+    print()
+    meta_bits = ", ".join(
+        f"{k}={v}" for k, v in sorted(meta.items()) if not isinstance(v, dict)
+    )
+    print(f"{len(records)} records; {meta_bits}")
+    for suite in sorted({r.suite for r in records}):
+        print()
+        print(suite_table(suite, [r for r in records if r.suite == suite]))
+    gt = guard_table(records)
+    if gt:
+        print()
+        print(gt)
+
+    if args.baseline:
+        fidelity, baseline = bench_io.read_baselines(args.baseline)
+        suites = {r.suite for r in records}
+        baseline = [b for b in baseline if b.suite in suites]
+        report = compare(records, baseline)
+        print()
+        print("### baseline diff")
+        print()
+        print("```")
+        print(report.summary())
+        print("```")
+        if meta.get("fidelity") != fidelity:
+            print(f"(fidelity mismatch: run {meta.get('fidelity')!r} vs "
+                  f"baseline {fidelity!r} — diff is informational)")
+
+    if args.trace:
+        print()
+        print(trace_summary(args.trace))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -81,6 +81,25 @@ _EXACT_NAMES = frozenset(
         "gemv_classes",
         "dense_classes",
         "tuned_hits_gemv",
+        # Obs-suite span-kind counts: the sim-clock serve trace is fully
+        # deterministic (eager scheduler, span emission outside the plan
+        # caches), so the whole digest is gated integer-exact — a changed
+        # count means an instrumentation site moved.
+        "spans_total",
+        "dispatch_spans",
+        "plan_spans",
+        "rung_spans",
+        "tune_spans",
+        "tick_spans",
+        "decode_spans",
+        "prefill_spans",
+        "admit_spans",
+        "drift_classes",
+        "drift_accepted",
+        "chrome_events",
+        "disarmed_obs_counters",
+        "ttft_p95",
+        "ttft_p99",
     },
 )
 # "speedup" metrics are modeled time ratios (sparse-vs-dense, the tuned

@@ -101,6 +101,7 @@ class Provenance:
     batch_grid: bool | None = None
     grid_steps: int | None = None
     guard: dict | None = None
+    trace_digest: dict | None = None
 
     @classmethod
     def capture(cls, config: Any = None, plan: Any = None) -> "Provenance":
@@ -114,10 +115,18 @@ class Provenance:
         any are non-zero — a record produced on a degraded process
         (faults caught, ladder tripped) says so; a clean process leaves
         the field absent so ordinary documents are unchanged.
+        `trace_digest` snapshots the armed trace's span-kind counts
+        (repro.obs) the same way: present only when a `trace_scope` is
+        active and has collected spans.
         """
         from repro.core import config as mmcfg
         from repro.guard import health as guard_health
+        from repro.obs import spans as obs_spans
 
+        trace = obs_spans.current_trace()
+        digest = trace.digest() if trace is not None else None
+        if digest is not None and not digest.get("total"):
+            digest = None  # an armed-but-empty trace leaves records clean
         cfg = config if config is not None else mmcfg.current()
         return cls(
             **cfg.provenance(),
@@ -125,6 +134,7 @@ class Provenance:
             python_version=platform.python_version(),
             git_sha=git_sha(),
             guard=guard_health.provenance_fields(),
+            trace_digest=digest,
             **_plan_fields(plan),
         )
 
@@ -134,6 +144,8 @@ class Provenance:
             d["blocks"] = list(d["blocks"])
         if d["guard"] is None:
             del d["guard"]  # clean-process records stay byte-identical
+        if d["trace_digest"] is None:
+            del d["trace_digest"]  # untraced records likewise
         return d
 
     @classmethod
@@ -142,6 +154,10 @@ class Provenance:
             raise SchemaError(f"provenance must be an object, got {type(d)}")
         if d.get("guard") is not None and not isinstance(d["guard"], Mapping):
             raise SchemaError("provenance guard must be an object")
+        if d.get("trace_digest") is not None and not isinstance(
+            d["trace_digest"], Mapping
+        ):
+            raise SchemaError("provenance trace_digest must be an object")
         required = {
             "chip",
             "amp",
@@ -163,6 +179,8 @@ class Provenance:
             kw["blocks"] = tuple(int(b) for b in kw["blocks"])
         if kw.get("guard") is not None:
             kw["guard"] = dict(kw["guard"])
+        if kw.get("trace_digest") is not None:
+            kw["trace_digest"] = dict(kw["trace_digest"])
         return cls(**kw)
 
 

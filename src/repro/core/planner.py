@@ -34,6 +34,7 @@ from typing import Iterable
 from repro.core import config, hw
 from repro.core.costmodel import (ALL_SCHEDULES, SCHEDULES, BlockPlan,
                                   MatmulCost, MatmulDims, cost_matmul)
+from repro.obs import spans as _obs
 
 
 def _round_up(a: int, b: int) -> int:
@@ -213,12 +214,80 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
         # Tuned plans depend on the *active tune cache* (mutable state),
         # so they are resolved outside the lru cache — only the modeled
         # fallback below is memoized.
-        return _plan_matmul_tuned(m, k, n, dtype_bytes=dtype_bytes,
+        cost = _plan_matmul_tuned(m, k, n, dtype_bytes=dtype_bytes,
                                   amp=cfg.amp, chip=cfg.chip_spec,
                                   batch=batch)
-    return _plan_matmul_cached(m, k, n, dtype_bytes=dtype_bytes,
-                               amp=cfg.amp, chip=cfg.chip_spec,
-                               mode=cfg.plan_mode, batch=batch)
+    else:
+        cost = _plan_matmul_cached(m, k, n, dtype_bytes=dtype_bytes,
+                                   amp=cfg.amp, chip=cfg.chip_spec,
+                                   mode=cfg.plan_mode, batch=batch)
+    if _obs.tracing():
+        # Span emission sits outside the lru cache so every resolution —
+        # memoized or not — produces exactly one plan span (the `obs`
+        # suite gates span counts integer-exact).
+        _emit_plan_span(m, k, n, batch=batch, dtype_bytes=dtype_bytes,
+                        cfg=cfg, cost=cost)
+    return cost
+
+
+def _count_candidates(m: int, k: int, n: int, *, dtype_bytes: int,
+                      amp: float, chip: hw.ChipSpec, mode: str,
+                      batch: int) -> int:
+    """Feasible candidate count for the plan span — mirrors the search
+    space (`_feasible_costs` / `_gemv_costs` / batch-grid) but checks
+    only the VMEM budget, never pricing a candidate.  Trace-time only."""
+    d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
+    budget = int(amp * chip.vmem_bytes)
+    if mode == "naive":
+        return 1
+
+    def feasible(schedules: tuple[str, ...], batch_grid: bool) -> int:
+        sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+        m_eff = d.m if batch_grid else d.m * d.batch
+        bm = _aligned_candidates(m_eff, sub if m_eff < lane else lane, 4096)
+        bk = _aligned_candidates(d.k, lane, 4096)
+        bn = _aligned_candidates(d.n, lane, 4096)
+        total = 0
+        for schedule in schedules:
+            for cand in ((a, b, c) for a in bm for b in bk for c in bn):
+                p = BlockPlan(*cand, schedule=schedule, batch_grid=batch_grid)
+                if p.vmem_bytes(d) <= budget:
+                    total += 1
+        return total
+
+    schedules = ("k_inner",) if mode == "k_inner" else SCHEDULES
+    count = feasible(schedules, batch_grid=False)
+    if mode in ("skew_aware", "tuned") and gemv_applicable(m, batch, chip):
+        sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+        bm = _round_up(d.m, sub)
+        for bk in _aligned_candidates(d.k, lane, 4096):
+            for bn in _aligned_candidates(d.n, lane, 4096):
+                p = BlockPlan(bm, bk, bn, schedule="splitk")
+                if p.vmem_bytes(d) <= budget:
+                    count += 1
+    if batch > 1 and mode != "k_inner":
+        count += feasible(("k_inner",), batch_grid=True)
+    return count
+
+
+def _emit_plan_span(m: int, k: int, n: int, *, batch: int, dtype_bytes: int,
+                    cfg, cost: MatmulCost) -> None:
+    """One "plan" span per resolution, stamped with the search outcome;
+    also annotates the enclosing dispatch span with the modeled time."""
+    p = cost.plan
+    modeled_us = cost.total_s * 1e6
+    _obs.event(
+        "plan", f"dense/{cfg.plan_mode}",
+        m=m, k=k, n=n, batch=batch, chip=cfg.chip_spec.name,
+        candidates=_count_candidates(m, k, n, dtype_bytes=dtype_bytes,
+                                     amp=cfg.amp, chip=cfg.chip_spec,
+                                     mode=cfg.plan_mode, batch=batch),
+        schedule=p.schedule, blocks=(p.bm, p.bk, p.bn),
+        batch_grid=p.batch_grid, grid_steps=cost.grid_steps,
+        modeled_us=modeled_us,
+    )
+    _obs.annotate("dispatch", modeled_us=modeled_us, schedule=p.schedule,
+                  grid_steps=cost.grid_steps)
 
 
 def _plan_matmul_tuned(m: int, k: int, n: int, *, dtype_bytes: int,

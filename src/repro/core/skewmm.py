@@ -51,6 +51,7 @@ from repro.core import config, epilogue as epilogue_mod, hw
 from repro.core.config import MatmulConfig, mm_config  # noqa: F401  (re-export)
 from repro.core.epilogue import Epilogue  # noqa: F401  (re-export)
 from repro.core.planner import plan_matmul
+from repro.obs import attribution as _obs
 
 _ACTIVE_LOGS: list[list] = []
 _LEGACY_LOG: list = []
@@ -169,38 +170,52 @@ def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
     for s in lead:
         batch *= s
     dtype_bytes = jnp.dtype(a.dtype).itemsize
-    cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
-                       chip=cfg.chip_spec, mode=cfg.plan_mode, batch=batch)
-    _record(cost)
+    # The dispatch span opens *before* planning so the tune lookup and
+    # the planner annotate this span (cache key, modeled_us) — the ops
+    # wrapper below joins it rather than opening a second one.
+    with _obs.dispatch("dense", m=m, k=k, n=n, batch=batch,
+                       backend=cfg.backend, epilogue=str(ep.spec)) as dsp:
+        cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                           chip=cfg.chip_spec, mode=cfg.plan_mode,
+                           batch=batch)
+        _record(cost)
 
-    out_dtype = cfg.out_dtype or a.dtype
-    if cfg.backend == "pallas":
-        from repro.kernels import ops  # lazy: kernels import pallas
-        kw = dict(plan=cost.plan, out_dtype=out_dtype,
-                  interpret=cfg.interpret)
-        res = ep.residual
-        if cost.plan.batch_grid and lead:
-            a3 = a.reshape(batch, m, k)
-            if res is not None:
-                res = jnp.broadcast_to(res, (*lead, m, n)).reshape(
-                    batch, m, n)
-            out = ops.skew_matmul_batched(a3, b,
-                                          epilogue=ep.replace(residual=res),
-                                          **kw)
-        else:
-            a2 = a.reshape(batch * m, k)
-            if res is not None:
-                res = jnp.broadcast_to(res, (*lead, m, n)).reshape(
-                    batch * m, n)
-            out = ops.skew_matmul(a2, b, epilogue=ep.replace(residual=res),
-                                  **kw)
-        return out.reshape(*lead, m, n)
-    # XLA backend: fp32 accumulation + fp32 epilogue to match the kernel.
-    z = jax.lax.dot_general(
-        a, b, (((a.ndim - 1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    z = epilogue_mod.apply_spec(z, ep.spec, ep.operands())
-    return z.astype(out_dtype)
+        out_dtype = cfg.out_dtype or a.dtype
+        if cfg.backend == "pallas":
+            from repro.kernels import ops  # lazy: kernels import pallas
+            kw = dict(plan=cost.plan, out_dtype=out_dtype,
+                      interpret=cfg.interpret)
+            res = ep.residual
+            if cost.plan.batch_grid and lead:
+                a3 = a.reshape(batch, m, k)
+                if res is not None:
+                    res = jnp.broadcast_to(res, (*lead, m, n)).reshape(
+                        batch, m, n)
+                out = ops.skew_matmul_batched(
+                    a3, b, epilogue=ep.replace(residual=res), **kw)
+            else:
+                a2 = a.reshape(batch * m, k)
+                if res is not None:
+                    res = jnp.broadcast_to(res, (*lead, m, n)).reshape(
+                        batch * m, n)
+                out = ops.skew_matmul(a2, b,
+                                      epilogue=ep.replace(residual=res),
+                                      **kw)
+            return out.reshape(*lead, m, n)
+
+        # XLA backend: fp32 accumulation + fp32 epilogue to match the
+        # kernel.  This *is* the ladder's reference rung, selected by
+        # config rather than by degradation — attributed as such.
+        def ref_run() -> jax.Array:
+            z = jax.lax.dot_general(
+                a, b, (((a.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            z = epilogue_mod.apply_spec(z, ep.spec, ep.operands())
+            return z.astype(out_dtype)
+
+        _obs.annotate("dispatch", rung="reference", rung_index=3,
+                      kernel="xla_dot")
+        return _obs.measured(dsp, ref_run)
 
 
 def einsum_mm(spec: str, a: jax.Array, b: jax.Array, **kw) -> jax.Array:

@@ -31,6 +31,7 @@ import zlib
 from typing import Any, Callable
 
 from repro.guard import health
+from repro.obs import spans as _obs
 
 LEVELS = ("tuned", "modeled", "conservative", "reference")
 
@@ -133,6 +134,7 @@ def retry_call(
                 on_failure(attempt, e)
             if attempt < max_retries:
                 health.record("retries")
+                _obs.event("retry", type(e).__name__, attempt=attempt)
                 if backoff is not None:
                     sleep(backoff.delay(attempt))
     raise err
@@ -244,16 +246,22 @@ def run_laddered(
     """
     lad = ladder(site)
     for level in LEVELS[lad.start(preferred):]:
-        if level == "reference":
-            return ref_fn()
-        try:
-            plan = plan_for(level)
-            validate_plan(plan, level)
-            return guarded_kernel(lambda: run_kernel(plan, level), site,
-                                  ref_fn)
-        except GuardError as e:
-            count_caught(e)
-            lad.trip(level, f"{type(e).__name__}: {e}")
+        idx = LEVELS.index(level)
+        with _obs.span("rung", level, site=site, index=idx) as sp:
+            if level == "reference":
+                _obs.annotate("dispatch", rung=level, rung_index=idx)
+                return ref_fn()
+            try:
+                plan = plan_for(level)
+                validate_plan(plan, level)
+                out = guarded_kernel(lambda: run_kernel(plan, level), site,
+                                     ref_fn)
+                _obs.annotate("dispatch", rung=level, rung_index=idx)
+                return out
+            except GuardError as e:
+                count_caught(e)
+                sp.set(error=type(e).__name__)
+                lad.trip(level, f"{type(e).__name__}: {e}")
     return ref_fn()
 
 

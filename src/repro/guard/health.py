@@ -1,8 +1,10 @@
 """Process-wide health telemetry for guarded execution.
 
-A tiny thread-safe counter registry — the observability half of the
-guard subsystem.  Every layer that injects, catches or degrades reports
-here, and two consumers read it back:
+Since the `repro.obs` unification this module is a thin facade over the
+typed metrics registry (`repro.obs.metrics.REGISTRY`) — same verbs,
+same snapshot contract, one backing store shared with the span tracer
+and the serving histograms.  Every layer that injects, catches or
+degrades reports here, and two consumers read it back:
 
   * bench provenance — `provenance_fields()` is attached to every
     benchmark record produced while any counter is non-zero, so a
@@ -20,7 +22,7 @@ Counters (monotonic within a process, `reset()` is test/suite-only):
                                     reference backend after a NaN scrub
   plans_rejected                    pre-dispatch validation failures
   fallbacks                         degradation-ladder trips
-  fallback_level                    gauge: the deepest ladder floor
+  fallback_level                    max-gauge: the deepest ladder floor
                                     reached (index into fallback.LEVELS)
   tuned_hits / tuned_misses         plan_mode="tuned" cache resolution
                                     ledger (serve gates misses == 0)
@@ -29,54 +31,61 @@ Counters (monotonic within a process, `reset()` is test/suite-only):
                                     scheduler drives underfilled to zero
   serve_*                           scheduler telemetry (serve.sched.
                                     telemetry: admissions, completions,
-                                    decode steps, prefill batches, ...)
+                                    decode steps, prefill batches, plus
+                                    queue/ttft/latency histograms whose
+                                    p50/p95/p99 ride provenance)
+  obs_*                             tracer-side counters (armed only)
 """
 
 from __future__ import annotations
 
-import threading
-
-_LOCK = threading.Lock()
-_COUNTS: dict[str, int] = {}
+from repro.obs.metrics import REGISTRY
 
 
 def record(name: str, n: int = 1) -> None:
     """Add `n` to counter `name` (creating it at zero)."""
-    with _LOCK:
-        _COUNTS[name] = _COUNTS.get(name, 0) + int(n)
+    REGISTRY.counter(name).inc(int(n))
 
 
 def set_gauge(name: str, value: int) -> None:
-    """Set gauge `name` to `value` if it exceeds the current reading.
+    """Raise gauge `name` to `value` if it exceeds the current reading.
 
     Gauges are high-water marks (the ladder only descends), so a stale
     writer can never roll one back.
     """
-    with _LOCK:
-        if int(value) > _COUNTS.get(name, 0):
-            _COUNTS[name] = int(value)
+    REGISTRY.gauge(name, mode="max").set(int(value))
 
 
 def get(name: str) -> int:
-    with _LOCK:
-        return _COUNTS.get(name, 0)
+    return int(REGISTRY.value(name))
 
 
 def snapshot() -> dict[str, int]:
-    """All non-zero counters, sorted by name (a stable dict copy)."""
-    with _LOCK:
-        return {k: v for k, v in sorted(_COUNTS.items()) if v}
+    """All non-zero counters and gauges, sorted by name (a stable copy)."""
+    return REGISTRY.counts()
 
 
 def reset() -> None:
-    """Zero every counter.  Tests and the `guard` bench suite only —
-    production consumers treat the counters as monotonic."""
-    with _LOCK:
-        _COUNTS.clear()
+    """Zero every metric — counters, gauges *and* histograms (unified
+    reset).  Tests and bench suites only — production consumers treat
+    the counters as monotonic."""
+    REGISTRY.reset()
 
 
-def provenance_fields() -> dict[str, int] | None:
-    """The counters as a bench-provenance fragment, or None when the
-    process is clean (so ordinary benchmark documents stay unchanged)."""
-    snap = snapshot()
-    return snap or None
+def provenance_fields() -> dict[str, int | float] | None:
+    """Counters plus histogram percentiles as a bench-provenance
+    fragment, or None when the process is clean (ordinary benchmark
+    documents stay unchanged).
+
+    Histograms contribute `<name>_p50/_p95/_p99` (ints when the
+    underlying observations are integral, e.g. tick distributions) —
+    this is where serve TTFT/latency percentiles reach `BENCH_*.json`.
+    """
+    out: dict[str, int | float] = dict(REGISTRY.counts())
+    for name, hist in sorted(REGISTRY.histograms().items()):
+        if name.startswith("drift/") or not hist.count():
+            continue
+        for p in (50, 95, 99):
+            v = hist.percentile(p)
+            out[f"{name}_p{p}"] = int(v) if float(v).is_integer() else float(v)
+    return out or None

@@ -32,6 +32,7 @@ from repro.guard.fallback import (
     PlanValidationError,
     max_floor,
 )
+from repro.obs import spans as _obs
 from repro.sparse.costmodel import sparse_vmem_bytes
 from repro.sparse.layout import LayoutSummary
 
@@ -63,6 +64,8 @@ def _reject(need: int, budget: int, real_budget: int, squeezed: bool,
     if injected:
         health.record("faults_injected")
         health.record("injected_amp_overflow")
+    _obs.event("validate", what, need=need, budget=budget, rejected=True,
+               injected=injected)
     raise PlanValidationError(
         f"{what}: working set {need} B exceeds AMP budget {budget} B",
         injected=injected)

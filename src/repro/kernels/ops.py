@@ -32,6 +32,7 @@ from repro.core.planner import plan_matmul
 from repro.guard import fallback as _guard
 from repro.guard import validate as _validate
 from repro.kernels import flash_attention as _fa
+from repro.obs import attribution as _obs
 from repro.kernels import gemv_splitk as _gemv
 from repro.kernels import ref as _ref
 from repro.kernels import rglru_scan as _rglru
@@ -81,11 +82,16 @@ def _conservative_plan(chip) -> BlockPlan:
 def _run_guarded_explicit(site, run, ref_fn):
     """Guard envelope for an explicitly-planned call: transient retry +
     scrub, degrading straight to the reference oracle on a caught
-    `GuardError` (an explicit plan has no ladder of alternatives)."""
+    `GuardError` (an explicit plan has no ladder of alternatives — its
+    two rungs are "explicit" and "reference", attributed as such)."""
     try:
-        return _guard.guarded_kernel(run, site, ref_fn)
+        out = _guard.guarded_kernel(run, site, ref_fn)
+        _obs.annotate("dispatch", rung="explicit", rung_index=0)
+        return out
     except _guard.GuardError as e:
         _guard.count_caught(e)
+        _obs.annotate("dispatch", rung="reference", rung_index=3,
+                      error=type(e).__name__)
         return ref_fn()
 
 
@@ -115,6 +121,7 @@ def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
         bm = min(p.bm, -(-m // 8) * 8)
         bk = min(p.bk, -(-k // 128) * 128)
         bn = min(p.bn, -(-n // 128) * 128)
+        _obs.annotate("dispatch", blocks=(bm, bk, bn), kernel=p.schedule)
         if p.schedule == "splitk":
             # The GEMV family: m is never blocked (the whole padded row
             # count rides in every block), so only pad to (pbm, bk)/(bk, bn)
@@ -141,24 +148,28 @@ def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
     def ref_fn() -> jax.Array:
         return _ref.matmul_epilogue_ref(a, b, epilogue=ep, out_dtype=odt)
 
-    if plan is not None:
-        return _run_guarded_explicit("dense", lambda: run(plan), ref_fn)
+    with _obs.dispatch("dense", m=m, k=k, n=n, batch=1,
+                       backend="pallas", epilogue=str(ep.spec)) as dsp:
+        if plan is not None:
+            return _run_guarded_explicit(
+                "dense", lambda: _obs.measured(dsp, lambda: run(plan)), ref_fn)
 
-    dtype_bytes = jnp.dtype(a.dtype).itemsize
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
 
-    def plan_for(level: str) -> BlockPlan:
-        if level == "conservative":
-            return _conservative_plan(cfg.chip_spec)
-        return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
-                           chip=cfg.chip_spec,
-                           mode=_level_mode(level, cfg)).plan
+        def plan_for(level: str) -> BlockPlan:
+            if level == "conservative":
+                return _conservative_plan(cfg.chip_spec)
+            return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                               chip=cfg.chip_spec,
+                               mode=_level_mode(level, cfg)).plan
 
-    def validate_plan(p: BlockPlan, level: str) -> None:
-        _validate.validate_dense(p, m, k, n, dtype_bytes=dtype_bytes,
-                                 amp=cfg.amp, chip=cfg.chip_spec)
+        def validate_plan(p: BlockPlan, level: str) -> None:
+            _validate.validate_dense(p, m, k, n, dtype_bytes=dtype_bytes,
+                                     amp=cfg.amp, chip=cfg.chip_spec)
 
-    return _guard.run_laddered("dense", _preferred(cfg), plan_for,
-                               validate_plan, lambda p, level: run(p), ref_fn)
+        return _guard.run_laddered(
+            "dense", _preferred(cfg), plan_for, validate_plan,
+            lambda p, level: _obs.measured(dsp, lambda: run(p)), ref_fn)
 
 
 def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
@@ -184,6 +195,7 @@ def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
         bm = min(p.bm, -(-m // 8) * 8)
         bk = min(p.bk, -(-k // 128) * 128)
         bn = min(p.bn, -(-n // 128) * 128)
+        _obs.annotate("dispatch", blocks=(bm, bk, bn), kernel=p.schedule)
         ap = _pad_to(a, (1, bm, bk))
         bp = _pad_to(b, (bk, bn))
         biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
@@ -197,25 +209,29 @@ def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
     def ref_fn() -> jax.Array:
         return _ref.matmul_epilogue_ref(a, b, epilogue=ep, out_dtype=odt)
 
-    if plan is not None:
-        return _run_guarded_explicit("dense", lambda: run(plan), ref_fn)
+    with _obs.dispatch("dense_batched", m=m, k=k, n=n, batch=nb,
+                       backend="pallas", epilogue=str(ep.spec)) as dsp:
+        if plan is not None:
+            return _run_guarded_explicit(
+                "dense", lambda: _obs.measured(dsp, lambda: run(plan)), ref_fn)
 
-    dtype_bytes = jnp.dtype(a.dtype).itemsize
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
 
-    def plan_for(level: str) -> BlockPlan:
-        if level == "conservative":
-            return _conservative_plan(cfg.chip_spec)
-        return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
-                           chip=cfg.chip_spec, batch=nb,
-                           mode=_level_mode(level, cfg)).plan
+        def plan_for(level: str) -> BlockPlan:
+            if level == "conservative":
+                return _conservative_plan(cfg.chip_spec)
+            return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+                               chip=cfg.chip_spec, batch=nb,
+                               mode=_level_mode(level, cfg)).plan
 
-    def validate_plan(p: BlockPlan, level: str) -> None:
-        _validate.validate_dense(p, m, k, n, batch=nb,
-                                 dtype_bytes=dtype_bytes, amp=cfg.amp,
-                                 chip=cfg.chip_spec)
+        def validate_plan(p: BlockPlan, level: str) -> None:
+            _validate.validate_dense(p, m, k, n, batch=nb,
+                                     dtype_bytes=dtype_bytes, amp=cfg.amp,
+                                     chip=cfg.chip_spec)
 
-    return _guard.run_laddered("dense", _preferred(cfg), plan_for,
-                               validate_plan, lambda p, level: run(p), ref_fn)
+        return _guard.run_laddered(
+            "dense", _preferred(cfg), plan_for, validate_plan,
+            lambda p, level: _obs.measured(dsp, lambda: run(p)), ref_fn)
 
 
 def sparse_matmul(a: jax.Array, b: jax.Array, layout, *,
@@ -248,6 +264,7 @@ def sparse_matmul(a: jax.Array, b: jax.Array, layout, *,
 
     def run(p: BlockPlan) -> jax.Array:
         bn = min(p.bn, -(-n // 128) * 128)
+        _obs.annotate("dispatch", blocks=(bm, bk, bn), kernel=p.schedule)
         ap = _pad_to(a, (bm, bk))
         bp = _pad_to(b, (bk, bn))
         biasp = None if ep.bias is None else _pad_to(ep.bias, (bn,))
@@ -262,37 +279,43 @@ def sparse_matmul(a: jax.Array, b: jax.Array, layout, *,
         return _ref.block_sparse_matmul_ref(a, b, layout, epilogue=ep,
                                             out_dtype=odt)
 
-    if plan is not None:
-        if isinstance(plan, SparseMatmulCost):
-            plan = plan.plan
-        if (plan.bm, plan.bk) != (bm, bk):
-            raise ValueError(
-                f"plan blocks ({plan.bm}, {plan.bk}) must match the layout "
-                f"block shape ({bm}, {bk})")
-        return _run_guarded_explicit("sparse", lambda: run(plan), ref_fn)
+    if plan is not None and isinstance(plan, SparseMatmulCost):
+        plan = plan.plan
+    if plan is not None and (plan.bm, plan.bk) != (bm, bk):
+        raise ValueError(
+            f"plan blocks ({plan.bm}, {plan.bk}) must match the layout "
+            f"block shape ({bm}, {bk})")
 
-    dtype_bytes = jnp.dtype(a.dtype).itemsize
-    summary = layout.summary()
+    with _obs.dispatch("sparse", m=m, k=k, n=n, batch=1,
+                       backend="pallas", epilogue=str(ep.spec)) as dsp:
+        if plan is not None:
+            return _run_guarded_explicit(
+                "sparse", lambda: _obs.measured(dsp, lambda: run(plan)),
+                ref_fn)
 
-    def plan_for(level: str) -> BlockPlan:
-        if level == "conservative":
-            p = BlockPlan(bm, bk, cfg.chip_spec.mxu_lanes,
-                          schedule="k_inner")
-            _skewmm.record_plan(cost_sparse_matmul(
-                summary, n, p, cfg.chip_spec, dtype_bytes=dtype_bytes))
-            return p
-        cost = plan_sparse_matmul(summary, n, dtype_bytes=dtype_bytes,
-                                  amp=cfg.amp, chip=cfg.chip_spec,
-                                  mode=_level_mode(level, cfg))
-        _skewmm.record_plan(cost)
-        return cost.plan
+        dtype_bytes = jnp.dtype(a.dtype).itemsize
+        summary = layout.summary()
 
-    def validate_plan(p: BlockPlan, level: str) -> None:
-        _validate.validate_sparse(p, summary, n, dtype_bytes=dtype_bytes,
-                                  amp=cfg.amp, chip=cfg.chip_spec)
+        def plan_for(level: str) -> BlockPlan:
+            if level == "conservative":
+                p = BlockPlan(bm, bk, cfg.chip_spec.mxu_lanes,
+                              schedule="k_inner")
+                _skewmm.record_plan(cost_sparse_matmul(
+                    summary, n, p, cfg.chip_spec, dtype_bytes=dtype_bytes))
+                return p
+            cost = plan_sparse_matmul(summary, n, dtype_bytes=dtype_bytes,
+                                      amp=cfg.amp, chip=cfg.chip_spec,
+                                      mode=_level_mode(level, cfg))
+            _skewmm.record_plan(cost)
+            return cost.plan
 
-    return _guard.run_laddered("sparse", _preferred(cfg), plan_for,
-                               validate_plan, lambda p, level: run(p), ref_fn)
+        def validate_plan(p: BlockPlan, level: str) -> None:
+            _validate.validate_sparse(p, summary, n, dtype_bytes=dtype_bytes,
+                                      amp=cfg.amp, chip=cfg.chip_spec)
+
+        return _guard.run_laddered(
+            "sparse", _preferred(cfg), plan_for, validate_plan,
+            lambda p, level: _obs.measured(dsp, lambda: run(p)), ref_fn)
 
 
 def grouped_matmul(a: jax.Array, b: jax.Array, *,
@@ -329,11 +352,15 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *,
         return _ref.grouped_matmul_ref(a, b, epilogue=ep, out_dtype=odt)
 
     if cfg.backend != "pallas":
-        if plan is None:
-            cost = plan_grouped_matmul(g, m, k, n, dtype_bytes=dtype_bytes,
-                                       amp=cfg.amp, chip=cfg.chip_spec)
-            _skewmm.record_plan(cost)
-        return ref_fn()
+        with _obs.dispatch("grouped", m=m, k=k, n=n, batch=1, groups=g,
+                           backend=cfg.backend,
+                           epilogue=str(ep.spec)) as dsp:
+            if plan is None:
+                cost = plan_grouped_matmul(g, m, k, n,
+                                           dtype_bytes=dtype_bytes,
+                                           amp=cfg.amp, chip=cfg.chip_spec)
+                _skewmm.record_plan(cost)
+            return _obs.measured(dsp, ref_fn)
 
     itp = (not _on_tpu()) if cfg.interpret is None else cfg.interpret
 
@@ -341,6 +368,7 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *,
         bm = min(p.bm, -(-m // 8) * 8)
         bk = min(p.bk, -(-k // 128) * 128)
         bn = min(p.bn, -(-n // 128) * 128)
+        _obs.annotate("dispatch", blocks=(bm, bk, bn), kernel=p.schedule)
         ap = _pad_to(a, (1, bm, bk))
         bp = _pad_to(b, (1, bk, bn))
         resp = (None if ep.residual is None
@@ -350,31 +378,36 @@ def grouped_matmul(a: jax.Array, b: jax.Array, *,
             out_dtype=odt, interpret=itp)
         return out[:, :m, :n]
 
-    if plan is not None:
-        if isinstance(plan, SparseMatmulCost):
-            plan = plan.plan
-        return _run_guarded_explicit("grouped", lambda: run(plan), ref_fn)
+    with _obs.dispatch("grouped", m=m, k=k, n=n, batch=1, groups=g,
+                       backend="pallas", epilogue=str(ep.spec)) as dsp:
+        if plan is not None:
+            if isinstance(plan, SparseMatmulCost):
+                plan = plan.plan
+            return _run_guarded_explicit(
+                "grouped", lambda: _obs.measured(dsp, lambda: run(plan)),
+                ref_fn)
 
-    def plan_for(level: str) -> BlockPlan:
-        if level == "conservative":
-            chip_spec = cfg.chip_spec
-            p = _conservative_plan(chip_spec)
-            summary = LayoutSummary.block_diag(g, m, k, (p.bm, p.bk))
-            _skewmm.record_plan(cost_sparse_matmul(
-                summary, n, p, chip_spec, dtype_bytes=dtype_bytes))
-            return p
-        cost = plan_grouped_matmul(g, m, k, n, dtype_bytes=dtype_bytes,
-                                   amp=cfg.amp, chip=cfg.chip_spec,
-                                   mode=_level_mode(level, cfg))
-        _skewmm.record_plan(cost)
-        return cost.plan
+        def plan_for(level: str) -> BlockPlan:
+            if level == "conservative":
+                chip_spec = cfg.chip_spec
+                p = _conservative_plan(chip_spec)
+                summary = LayoutSummary.block_diag(g, m, k, (p.bm, p.bk))
+                _skewmm.record_plan(cost_sparse_matmul(
+                    summary, n, p, chip_spec, dtype_bytes=dtype_bytes))
+                return p
+            cost = plan_grouped_matmul(g, m, k, n, dtype_bytes=dtype_bytes,
+                                       amp=cfg.amp, chip=cfg.chip_spec,
+                                       mode=_level_mode(level, cfg))
+            _skewmm.record_plan(cost)
+            return cost.plan
 
-    def validate_plan(p: BlockPlan, level: str) -> None:
-        _validate.validate_grouped(p, g, m, k, dtype_bytes=dtype_bytes,
-                                   amp=cfg.amp, chip=cfg.chip_spec)
+        def validate_plan(p: BlockPlan, level: str) -> None:
+            _validate.validate_grouped(p, g, m, k, dtype_bytes=dtype_bytes,
+                                       amp=cfg.amp, chip=cfg.chip_spec)
 
-    return _guard.run_laddered("grouped", _preferred(cfg), plan_for,
-                               validate_plan, lambda p, level: run(p), ref_fn)
+        return _guard.run_laddered(
+            "grouped", _preferred(cfg), plan_for, validate_plan,
+            lambda p, level: _obs.measured(dsp, lambda: run(p)), ref_fn)
 
 
 def flash_attention(q, k, v, *, causal=True, window=None, softcap=0.0,

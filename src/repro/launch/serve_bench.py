@@ -70,6 +70,12 @@ def main(argv=None) -> int:
                          "no split-K plan was hit during the run (pair "
                          "with --decode-scale: the reduced shapes are "
                          "grid-overhead-bound and stay dense)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="arm structured tracing (repro.obs, sim clock) "
+                         "around the scheduler run and write the "
+                         "Chrome-trace JSON here; decode-step dispatch "
+                         "spans carry tune key, rung, modeled_us and "
+                         "measured_us")
     mmcfg.add_cli_args(ap)
     args = ap.parse_args(argv)
 
@@ -105,9 +111,24 @@ def main(argv=None) -> int:
 
         trace = build_trace(args, cfg)
         health.reset()
+        span_tr = None
         with tune_runtime.use_cache(cache), mmcfg.mm_config(plan_mode="tuned"):
-            sched = Scheduler(params, cfg, table)
-            results = sched.run(trace, max_ticks=args.ticks)
+            if args.trace:
+                # Cache/spec capture stayed outside the scope: the trace
+                # is the serve run, not the tuning sweep.
+                from repro.obs import SimClock, trace_scope
+
+                with trace_scope(clock=SimClock()) as span_tr:
+                    sched = Scheduler(params, cfg, table)
+                    results = sched.run(trace, max_ticks=args.ticks)
+            else:
+                sched = Scheduler(params, cfg, table)
+                results = sched.run(trace, max_ticks=args.ticks)
+        if span_tr is not None:
+            span_tr.export_chrome(args.trace)
+            digest = span_tr.digest()
+            print("[serve_bench] trace " + args.trace + " "
+                  + "/".join(f"{k}:{v}" for k, v in sorted(digest.items())))
 
         summary = sched.telemetry.summary()
         line = ", ".join(f"{k}={v:g}" for k, v in sorted(summary.items()))

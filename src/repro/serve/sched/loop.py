@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import moe
+from repro.obs import spans as _obs
 from repro.serve import engine, kvcache
 from repro.serve.sched import moebatch
 from repro.serve.sched.buckets import BucketTable
@@ -149,6 +150,11 @@ class Scheduler:
     def _prefill_group(self, reqs: list[Request], pb: int, now: int) -> None:
         n = len(reqs)
         b_pad = self.table.batch_bucket(n)
+        with _obs.span("prefill", f"pb{pb}", bucket=pb, n=n, batch=b_pad):
+            self._prefill_group_inner(reqs, pb, now, n, b_pad)
+
+    def _prefill_group_inner(self, reqs: list[Request], pb: int, now: int,
+                             n: int, b_pad: int) -> None:
         tokens = np.zeros((b_pad, pb), np.int32)
         last = np.zeros(b_pad, np.int32)
         for i, r in enumerate(reqs):
@@ -195,25 +201,29 @@ class Scheduler:
         admitted = self.queue.pop_ready(now, budget)
         if not admitted:
             return
-        self._ensure_slab(self.n_live + len(admitted))
-        groups: dict[int, list[Request]] = {}
-        for r in admitted:
-            groups.setdefault(self.table.prompt_bucket(r.prompt_len), []).append(r)
-        for pb in sorted(groups):
-            self._prefill_group(groups[pb], pb, now)
+        with _obs.span("admit", n=len(admitted)):
+            self._ensure_slab(self.n_live + len(admitted))
+            groups: dict[int, list[Request]] = {}
+            for r in admitted:
+                groups.setdefault(
+                    self.table.prompt_bucket(r.prompt_len), []
+                ).append(r)
+            for pb in sorted(groups):
+                self._prefill_group(groups[pb], pb, now)
 
     # ------------------------------------------------------------ decode
     def _decode_all(self, now: int) -> None:
         step_fn = engine.guarded_decode_step if self.guard else engine.decode_step
-        logits, self._slab = self._model_call(
-            lambda: step_fn(
-                self.params,
-                self.cfg,
-                self._slab,
-                jnp.asarray(self._tokens),
-                jnp.asarray(self._pos),
+        with _obs.span("decode", batch=len(self._tokens), live=len(self.live)):
+            logits, self._slab = self._model_call(
+                lambda: step_fn(
+                    self.params,
+                    self.cfg,
+                    self._slab,
+                    jnp.asarray(self._tokens),
+                    jnp.asarray(self._pos),
+                )
             )
-        )
         tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         logits_np = np.asarray(logits) if self.trace_logits else None
         self.telemetry.decode_steps += 1
@@ -246,9 +256,10 @@ class Scheduler:
     def step(self) -> None:
         """One tick: admit + prefill, then one batched decode step."""
         now = self.clock.now
-        self._admit(now)
-        if self.live:
-            self._decode_all(now)
+        with _obs.span("tick", f"t{now}", tick=now):
+            self._admit(now)
+            if self.live:
+                self._decode_all(now)
         self.telemetry.ticks += 1
         self.clock.advance()
 

@@ -12,11 +12,22 @@ from __future__ import annotations
 
 import math
 
+_RAISE = object()
 
-def percentile(values: list[int] | list[float], p: float) -> float:
-    """Nearest-rank percentile (deterministic, no interpolation)."""
+
+def percentile(
+    values: list[int] | list[float], p: float, default: float | object = _RAISE
+) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation).
+
+    An empty distribution raises ValueError unless `default` is given —
+    pass e.g. ``default=0.0`` for zero-request serve runs where "no
+    observations" is a legitimate outcome, not a bug.
+    """
     if not values:
-        raise ValueError("percentile of empty list")
+        if default is _RAISE:
+            raise ValueError("percentile of empty list")
+        return float(default)  # type: ignore[arg-type]
     if not 0 < p <= 100:
         raise ValueError(f"percentile must be in (0, 100], got {p}")
     ordered = sorted(values)
@@ -80,11 +91,25 @@ class ServeTelemetry:
         return out
 
     def record_health(self) -> None:
-        """Mirror the counters into guard.health (serve_ prefix)."""
+        """Mirror counters *and* distributions into the unified registry.
+
+        Scalars keep their `serve_` counter names (the chaos/serve
+        baselines gate them).  The tick distributions — queue wait,
+        TTFT, latency — land in histograms so their p50/p95/p99 reach
+        bench provenance instead of being summarised once and lost.
+        """
         from repro.guard import health
+        from repro.obs.metrics import REGISTRY
 
         health.record("serve_admitted", self.admitted)
         health.record("serve_completed", self.completed)
         health.record("serve_prefills", self.prefill_batches)
         health.record("serve_decode_steps", self.decode_steps)
         health.record("serve_tokens", self.tokens_out)
+        for name, dist in (
+            ("serve_queue_wait", self.queue_wait),
+            ("serve_ttft", self.ttft),
+            ("serve_latency", self.latency),
+        ):
+            if dist:
+                REGISTRY.histogram(name).observe_many(dist)

@@ -33,6 +33,7 @@ from repro.sparse.costmodel import (
     cost_sparse_matmul,
     sparse_vmem_bytes,
 )
+from repro.obs import spans as _obs
 from repro.sparse.layout import LayoutSummary
 
 
@@ -74,21 +75,60 @@ def plan_sparse_matmul(
         # resolved outside the lru cache, unlike the modeled modes, so a
         # cache swap inside a `with mm_config(...)` block is never served
         # a stale plan.
-        return _plan_sparse_tuned(
+        cost = _plan_sparse_tuned(
             summary,
             n,
             dtype_bytes=dtype_bytes,
             amp=cfg.amp,
             chip=cfg.chip_spec,
         )
-    return _plan_sparse_cached(
-        summary,
-        n,
-        dtype_bytes=dtype_bytes,
-        amp=cfg.amp,
-        chip=cfg.chip_spec,
-        mode=cfg.plan_mode,
+    else:
+        cost = _plan_sparse_cached(
+            summary,
+            n,
+            dtype_bytes=dtype_bytes,
+            amp=cfg.amp,
+            chip=cfg.chip_spec,
+            mode=cfg.plan_mode,
+        )
+    if _obs.tracing():
+        # Outside the lru cache: every resolution emits exactly one span.
+        _emit_sparse_plan_span(summary, n, cfg=cfg, cost=cost,
+                               dtype_bytes=dtype_bytes)
+    return cost
+
+
+def _emit_sparse_plan_span(summary: LayoutSummary, n: int, *, cfg, cost,
+                           dtype_bytes: int) -> None:
+    """Trace-time span for a sparse plan resolution (feasibility-only
+    candidate count over the (schedule x bn) space)."""
+    chip = cfg.chip_spec
+    budget = int(cfg.amp * chip.vmem_bytes)
+    lane = chip.mxu_lanes
+    mode = cfg.plan_mode
+    if mode == "naive":
+        candidates = 1
+    else:
+        schedules = (
+            ("k_inner",) if mode == "k_inner" else PLANNED_SPARSE_SCHEDULES
+        )
+        candidates = 0
+        for schedule in schedules:
+            for bn in _aligned_candidates(n, lane, 4096):
+                p = BlockPlan(summary.bm, summary.bk, bn, schedule=schedule)
+                if sparse_vmem_bytes(summary, p, dtype_bytes) <= budget:
+                    candidates += 1
+    modeled_us = cost.total_s * 1e6
+    p = cost.plan
+    _obs.event(
+        "plan", f"sparse/{mode}",
+        m=summary.m, k=summary.k, n=n, chip=chip.name,
+        density=summary.density, candidates=candidates,
+        schedule=p.schedule, blocks=(p.bm, p.bk, p.bn),
+        grid_steps=cost.grid_steps, modeled_us=modeled_us,
     )
+    _obs.annotate("dispatch", modeled_us=modeled_us, schedule=p.schedule,
+                  grid_steps=cost.grid_steps)
 
 
 def _plan_sparse_tuned(
@@ -231,7 +271,7 @@ def plan_grouped_matmul(
     if cfg.plan_mode == "tuned":
         # Same contract as the other planners: tuned plans read the
         # mutable active cache, so they bypass the lru cache.
-        return _plan_grouped_tuned(
+        cost = _plan_grouped_tuned(
             groups,
             m,
             k,
@@ -240,16 +280,52 @@ def plan_grouped_matmul(
             amp=cfg.amp,
             chip=cfg.chip_spec,
         )
-    return _plan_grouped_cached(
-        groups,
-        m,
-        k,
-        n,
-        dtype_bytes=dtype_bytes,
-        amp=cfg.amp,
-        chip=cfg.chip_spec,
-        mode=cfg.plan_mode,
+    else:
+        cost = _plan_grouped_cached(
+            groups,
+            m,
+            k,
+            n,
+            dtype_bytes=dtype_bytes,
+            amp=cfg.amp,
+            chip=cfg.chip_spec,
+            mode=cfg.plan_mode,
+        )
+    if _obs.tracing():
+        _emit_grouped_plan_span(groups, m, k, n, cfg=cfg, cost=cost,
+                                dtype_bytes=dtype_bytes)
+    return cost
+
+
+def _emit_grouped_plan_span(groups: int, m: int, k: int, n: int, *, cfg,
+                            cost, dtype_bytes: int) -> None:
+    """Trace-time span for a grouped (MoE expert) plan resolution."""
+    chip = cfg.chip_spec
+    budget = int(cfg.amp * chip.vmem_bytes)
+    sub, lane = chip.mxu_sublanes, chip.mxu_lanes
+    mode = cfg.plan_mode
+    if mode == "naive":
+        candidates = 1
+    else:
+        candidates = 0
+        for bm in _aligned_candidates(m, sub if m < lane else lane, 4096):
+            for bk in _aligned_candidates(k, lane, 4096):
+                summary = LayoutSummary.block_diag(groups, m, k, (bm, bk))
+                for bn in _aligned_candidates(n, lane, 4096):
+                    p = BlockPlan(bm, bk, bn, schedule="k_inner")
+                    if sparse_vmem_bytes(summary, p, dtype_bytes) <= budget:
+                        candidates += 1
+    modeled_us = cost.total_s * 1e6
+    p = cost.plan
+    _obs.event(
+        "plan", f"grouped/{mode}",
+        groups=groups, m=m, k=k, n=n, chip=chip.name,
+        candidates=candidates, schedule=p.schedule,
+        blocks=(p.bm, p.bk, p.bn), grid_steps=cost.grid_steps,
+        modeled_us=modeled_us,
     )
+    _obs.annotate("dispatch", modeled_us=modeled_us, schedule=p.schedule,
+                  grid_steps=cost.grid_steps)
 
 
 def _plan_grouped_tuned(

@@ -31,6 +31,7 @@ from repro.core import hw
 from repro.core.costmodel import BlockPlan
 from repro.guard import faults as _faults
 from repro.guard import health as _health
+from repro.obs import spans as _obs
 from repro.sparse.layout import LayoutSummary
 from repro.tune.cache import (
     TuneCache,
@@ -123,16 +124,22 @@ def use_cache(cache: TuneCache | str | None) -> Iterator[TuneCache | None]:
 
 
 # ---------------------------------------------------------------- lookups
-def _count(entry) -> None:
+def _count(entry, key: str) -> None:
     # Hit/miss ledger for the serving scheduler's coverage gate: under
     # plan_mode="tuned" the bucket table promises every scheduled GEMM
     # resolves in-cache, and the bench gates tuned_misses == 0 exact.
     # Split-K hits are ledgered separately so the decode-smoke gate can
     # assert GEMV classes are actually *active* (decode steps resolving
     # measured split-K plans), not just covered.
-    _health.record("tuned_hits" if entry is not None else "tuned_misses")
-    if entry is not None and entry.schedule == "splitk":
+    hit = entry is not None
+    gemv = hit and entry.schedule == "splitk"
+    _health.record("tuned_hits" if hit else "tuned_misses")
+    if gemv:
         _health.record("tuned_hits_gemv")
+    if _obs.tracing():
+        _obs.event("tune", key, hit=hit, gemv=gemv,
+                   schedule=None if entry is None else entry.schedule)
+        _obs.annotate("dispatch", tune_key=key, tune_hit=hit)
 
 
 def lookup_dense(
@@ -146,8 +153,9 @@ def lookup_dense(
     chip: hw.ChipSpec,
 ) -> BlockPlan | None:
     cls = ShapeClass.of(m, k, n, batch)
-    entry = get_active_cache().get(dense_key(chip.name, dtype_bytes, amp, cls))
-    _count(entry)
+    key = dense_key(chip.name, dtype_bytes, amp, cls)
+    entry = get_active_cache().get(key)
+    _count(entry, key)
     # cache_corrupt injection point: an armed fault scope can replace the
     # result (hit or miss — a corrupt cache fabricates entries too) with
     # the sentinel plan the planners' budget re-check rejects.
@@ -163,8 +171,9 @@ def lookup_sparse(
     amp: float,
     chip: hw.ChipSpec,
 ) -> BlockPlan | None:
-    entry = get_active_cache().get(sparse_key(chip.name, dtype_bytes, amp, summary, n))
-    _count(entry)
+    key = sparse_key(chip.name, dtype_bytes, amp, summary, n)
+    entry = get_active_cache().get(key)
+    _count(entry, key)
     return _faults.maybe_corrupt_lookup(
         None if entry is None else entry.plan, "lookup_sparse")
 
@@ -180,9 +189,8 @@ def lookup_grouped(
     chip: hw.ChipSpec,
 ) -> BlockPlan | None:
     cls = ShapeClass.of(m, k, n)
-    entry = get_active_cache().get(
-        grouped_key(chip.name, dtype_bytes, amp, groups, cls)
-    )
-    _count(entry)
+    key = grouped_key(chip.name, dtype_bytes, amp, groups, cls)
+    entry = get_active_cache().get(key)
+    _count(entry, key)
     return _faults.maybe_corrupt_lookup(
         None if entry is None else entry.plan, "lookup_grouped")
