@@ -100,6 +100,13 @@ _EXACT_NAMES = frozenset(
         "disarmed_obs_counters",
         "ttft_p95",
         "ttft_p99",
+        # Shard-suite gates: the per-row never-cheaper-than-local floor
+        # invariant and the chosen device count are both pure cost-model
+        # arithmetic over the committed ChipSpec link counts, so they are
+        # gated integer-exact ("verdict" above already covers the
+        # pod-scale gc200-vs-rtx spread comparison).
+        "floor_ok",
+        "devices",
     },
 )
 # "speedup" metrics are modeled time ratios (sparse-vs-dense, the tuned

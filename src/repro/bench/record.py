@@ -78,7 +78,7 @@ def _plan_fields(plan: Any) -> dict[str, Any]:
             f"plan must be a MatmulCost, a provenance dict, or None; "
             f"got {type(plan).__name__}",
         )
-    allowed = {"schedule", "blocks", "batch_grid", "grid_steps"}
+    allowed = {"schedule", "blocks", "batch_grid", "grid_steps", "sharding"}
     fields = {k: plan[k] for k in allowed if k in plan}
     if fields.get("blocks") is not None:
         fields["blocks"] = tuple(int(b) for b in fields["blocks"])
@@ -102,6 +102,12 @@ class Provenance:
     grid_steps: int | None = None
     guard: dict | None = None
     trace_digest: dict | None = None
+    # Sharded-planning provenance: the configured mesh ("4x2", from the
+    # resolved MatmulConfig) and the chosen ShardSpec ("m1k2n4b1/...",
+    # from the plan).  None on unsharded runs — and dropped from the JSON
+    # so pre-sharding baselines stay byte-identical.
+    mesh: str | None = None
+    sharding: str | None = None
 
     @classmethod
     def capture(cls, config: Any = None, plan: Any = None) -> "Provenance":
@@ -146,6 +152,10 @@ class Provenance:
             del d["guard"]  # clean-process records stay byte-identical
         if d["trace_digest"] is None:
             del d["trace_digest"]  # untraced records likewise
+        if d["mesh"] is None:
+            del d["mesh"]  # unsharded records likewise
+        if d["sharding"] is None:
+            del d["sharding"]
         return d
 
     @classmethod

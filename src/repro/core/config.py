@@ -8,8 +8,9 @@ of API instead of per-call kwarg threading:
     with mm_config(amp=0.3, chip="ipu_gc200"):
         logits = model(params, batch)        # every matmul re-planned
 
-`MatmulConfig` is a frozen dataclass of the six knobs every planned matmul
-resolves (`backend`, `amp`, `chip`, `plan_mode`, `out_dtype`, `interpret`).
+`MatmulConfig` is a frozen dataclass of the knobs every planned matmul
+resolves (`backend`, `amp`, `chip`, `plan_mode`, `out_dtype`, `interpret`,
+plus the sharded-planning axis `mesh_shape` / `sharding`).
 Resolution is layered, innermost wins:
 
     defaults  <  REPRO_MM_BACKEND env var  <  mm_config stack (outer..inner)
@@ -34,6 +35,7 @@ import threading
 from typing import Any, Iterator
 
 from repro.core import hw
+from repro.core.costmodel import ShardSpec
 
 BACKENDS = ("xla", "pallas")
 PLAN_MODES = ("skew_aware", "dense", "k_inner", "naive", "tuned")
@@ -55,6 +57,14 @@ class MatmulConfig:
     plan_mode: str = "skew_aware"
     out_dtype: Any = None
     interpret: bool | None = None
+    # Sharded planning: `mesh_shape` is the device mesh (a tuple of axis
+    # sizes; its product is the chip count) and `sharding` picks how the
+    # planner splits each matmul over it — "auto" (or None) searches
+    # (schedule x blocks x ShardSpec) jointly, an explicit `ShardSpec`
+    # pins the split.  mesh_shape=None (the default) is single-chip
+    # planning, bit-identical to the pre-sharding planner.
+    mesh_shape: tuple | None = None
+    sharding: Any = None
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
@@ -69,10 +79,30 @@ class MatmulConfig:
         # not at the first matmul, and `chip` is always a ChipSpec after
         # construction.
         object.__setattr__(self, "chip", hw.get_chip(self.chip))
+        if self.mesh_shape is not None:
+            ms = tuple(int(s) for s in self.mesh_shape)
+            if not ms or any(s < 1 for s in ms):
+                raise ValueError(f"mesh_shape must be a non-empty tuple of "
+                                 f"positive ints, got {self.mesh_shape!r}")
+            object.__setattr__(self, "mesh_shape", ms)
+        if self.sharding is not None and self.sharding != "auto" \
+                and not isinstance(self.sharding, ShardSpec):
+            raise ValueError(f"sharding must be None, 'auto', or a ShardSpec,"
+                             f" got {self.sharding!r}")
 
     @property
     def chip_spec(self) -> hw.ChipSpec:
         return self.chip
+
+    @property
+    def mesh_devices(self) -> int:
+        """Total chips in the configured mesh (1 when unsharded)."""
+        if self.mesh_shape is None:
+            return 1
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
 
     def replace(self, **kw) -> "MatmulConfig":
         return dataclasses.replace(self, **kw)
@@ -84,8 +114,13 @@ class MatmulConfig:
         spec so a committed result names the chip/amp/backend/plan_mode
         it was produced under without serializing a ChipSpec.
         """
-        return {"chip": self.chip_spec.name, "amp": self.amp,
-                "backend": self.backend, "plan_mode": self.plan_mode}
+        out = {"chip": self.chip_spec.name, "amp": self.amp,
+               "backend": self.backend, "plan_mode": self.plan_mode}
+        if self.mesh_shape is not None:
+            # Only sharded runs carry the mesh key, so unsharded records
+            # (and every committed baseline) stay byte-identical.
+            out["mesh"] = "x".join(str(s) for s in self.mesh_shape)
+        return out
 
 
 _FIELDS = frozenset(f.name for f in dataclasses.fields(MatmulConfig))
@@ -166,8 +201,10 @@ def scope(cfg: MatmulConfig | None) -> Iterator[MatmulConfig | None]:
         yield None
         return
     fields = dataclasses.asdict(cfg)
-    # asdict recurses into the ChipSpec; keep the spec object itself.
+    # asdict recurses into the ChipSpec / ShardSpec; keep the objects.
     fields["chip"] = cfg.chip
+    fields["mesh_shape"] = cfg.mesh_shape
+    fields["sharding"] = cfg.sharding
     with mm_config(**fields) as resolved:
         yield resolved
 
@@ -188,6 +225,23 @@ def add_cli_args(ap) -> None:
                     help="matmul backend (default: env var, then xla)")
     ap.add_argument("--plan-mode", default=None, choices=PLAN_MODES,
                     help="planner search mode")
+    # Named --mm-mesh (like --mm-backend): dryrun/costprobe already use
+    # --mesh for their topology *name* ("pod"/"multipod").
+    ap.add_argument("--mm-mesh", default=None, metavar="SHAPE",
+                    help="device mesh for sharded planning, comma-separated "
+                         "axis sizes (e.g. 4 or 4,2); default: single-chip")
+
+
+def parse_mesh(mesh: str | None) -> tuple[int, ...] | None:
+    """'4,2' -> (4, 2); None / '' fall through to the context."""
+    if not mesh:
+        return None
+    try:
+        shape = tuple(int(s) for s in str(mesh).split(","))
+    except ValueError:
+        raise ValueError(f"--mm-mesh must be comma-separated ints, "
+                         f"got {mesh!r}") from None
+    return shape
 
 
 def scope_from_args(args):
@@ -196,4 +250,5 @@ def scope_from_args(args):
     return mm_config(amp=getattr(args, "amp", None),
                      chip=getattr(args, "chip", None),
                      backend=getattr(args, "mm_backend", None),
-                     plan_mode=getattr(args, "plan_mode", None))
+                     plan_mode=getattr(args, "plan_mode", None),
+                     mesh_shape=parse_mesh(getattr(args, "mm_mesh", None)))

@@ -162,6 +162,70 @@ class BlockPlan:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """How one matmul's dims are split across a device mesh.
+
+    `m`/`k`/`n`/`batch` are shard counts per logical dim; their product is
+    the device count the spec occupies.  Per-device dims are the ceil-div
+    shards (`local_dims`), so a spec stays valid for tiny smoke shapes.
+
+    Collective semantics (the standard SPMD reading, sequence-parallel /
+    Megatron conventions):
+
+      n > 1      — A is stored sharded across the n-group (sequence /
+                   row parallel) and must be all-gathered before the
+                   column-parallel matmul: ring all-gather, wire bytes
+                   (n-1)/n x local A per device.
+      zero3      — B is stored ZeRO-3/FSDP-sharded over the (m x batch)
+                   data group and all-gathered per use.  Off by default:
+                   serving keeps weights resident.
+      k > 1      — each device holds a partial C over its k-shard;
+                   `partials` picks the combining collective: "all_reduce"
+                   (2x wire at accumulator width, output replicated in the
+                   k-group) or "reduce_scatter" (1x wire, output stays
+                   sharded — the windowed-einsum serving convention).
+
+    Hashable (frozen, all-int/str fields) so it can ride in `mm_config`
+    layers and the planner's lru_cache keys.
+    """
+
+    m: int = 1
+    k: int = 1
+    n: int = 1
+    batch: int = 1
+    partials: str = "all_reduce"
+    zero3: bool = False
+
+    def __post_init__(self):
+        for f in ("m", "k", "n", "batch"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"ShardSpec.{f} must be a positive int, "
+                                 f"got {v!r}")
+        if self.partials not in ("all_reduce", "reduce_scatter"):
+            raise ValueError(f"ShardSpec.partials must be 'all_reduce' or "
+                             f"'reduce_scatter', got {self.partials!r}")
+
+    @property
+    def devices(self) -> int:
+        return self.m * self.k * self.n * self.batch
+
+    def local_dims(self, d: MatmulDims) -> MatmulDims:
+        """The per-device shard of the problem (ceil-div per dim)."""
+        return dataclasses.replace(
+            d, m=_ceil_div(d.m, self.m), k=_ceil_div(d.k, self.k),
+            n=_ceil_div(d.n, self.n), batch=_ceil_div(d.batch, self.batch))
+
+    def describe(self) -> str:
+        s = f"m{self.m}k{self.k}n{self.n}b{self.batch}"
+        if self.k > 1:
+            s += f"/{self.partials}"
+        if self.zero3:
+            s += "/zero3"
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
 class MatmulCost:
     dims: MatmulDims
     plan: BlockPlan
@@ -172,10 +236,20 @@ class MatmulCost:
     vmem_bytes: int
     grid_steps: int
     mxu_utilization: float        # useful / padded FLOPs
+    # Sharded-execution terms (single-chip costs leave these at their
+    # defaults, so every pre-sharding construction site and committed
+    # baseline is unchanged).  `dims` is always the *per-device* problem;
+    # `global_dims` carries the unsharded dims when a ShardSpec applies.
+    sharding: "ShardSpec | None" = None
+    global_dims: "MatmulDims | None" = None
+    collective_bytes: int = 0     # total wire bytes per device
+    collective_s: float = 0.0     # exposed (un-hidden) collective seconds
+    hidden_collective_s: float = 0.0  # wire time overlapped with compute
 
     @property
     def total_s(self) -> float:
-        return max(self.compute_s, self.memory_s) + self.overhead_s
+        return (max(self.compute_s, self.memory_s) + self.overhead_s
+                + self.collective_s)
 
     @property
     def achieved_flops(self) -> float:
@@ -186,7 +260,10 @@ class MatmulCost:
 
     @property
     def bound(self) -> str:
-        if self.overhead_s > max(self.compute_s, self.memory_s):
+        busy = max(self.compute_s, self.memory_s)
+        if self.collective_s > busy and self.collective_s > self.overhead_s:
+            return "collective"
+        if self.overhead_s > busy:
             return "grid-overhead"
         return "compute" if self.compute_s >= self.memory_s else "memory"
 
@@ -196,22 +273,31 @@ class MatmulCost:
         This is the provenance surface benchmark records carry (see
         repro.bench.record.Provenance): enough to answer "which schedule
         and blocks produced this number" without re-running the planner.
+        Sharded plans additionally name the chosen ShardSpec.
         """
         p = self.plan
-        return {"schedule": p.schedule, "blocks": (p.bm, p.bk, p.bn),
-                "batch_grid": p.batch_grid, "grid_steps": self.grid_steps}
+        out = {"schedule": p.schedule, "blocks": (p.bm, p.bk, p.bn),
+               "batch_grid": p.batch_grid, "grid_steps": self.grid_steps}
+        if self.sharding is not None:
+            out["sharding"] = self.sharding.describe()
+        return out
 
     def explain(self) -> str:
         d, p = self.dims, self.plan
         batch = f" batch={d.batch}{'(grid)' if p.batch_grid else '(fold)'}" \
             if d.batch > 1 else ""
+        shard = ""
+        if self.sharding is not None:
+            shard = (f" shard={self.sharding.describe()} "
+                     f"coll={self.collective_s * 1e6:.1f}us"
+                     f"(+{self.hidden_collective_s * 1e6:.1f}us hidden)")
         return (
             f"mm {d.m}x{d.k}x{d.n}{batch} plan ({p.bm},{p.bk},{p.bn}) "
             f"sched={p.schedule} "
             f"grid={self.grid_steps} vmem={self.vmem_bytes / 2**20:.2f}MiB "
             f"compute={self.compute_s * 1e6:.1f}us memory={self.memory_s * 1e6:.1f}us "
             f"overhead={self.overhead_s * 1e6:.1f}us bound={self.bound} "
-            f"mxu_util={self.mxu_utilization:.3f}"
+            f"mxu_util={self.mxu_utilization:.3f}{shard}"
         )
 
 
@@ -306,3 +392,110 @@ def cost_matmul(d: MatmulDims, p: BlockPlan,
         hbm_bytes=hbm_bytes, vmem_bytes=p.vmem_bytes(d), grid_steps=steps,
         mxu_utilization=mxu_utilization,
     )
+
+
+# ------------------------------------------------------- sharded execution
+# Fraction of hideable wire time the async-collective pipeline actually
+# hides (windowed einsum is not perfectly overlapped: the first window's
+# transfer and the per-window collective-permute issue cost stay exposed).
+OVERLAP_EFFICIENCY = 0.8
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveTerms:
+    """Per-device wire traffic for one sharded matmul, term by term."""
+
+    gather_a_bytes: int           # ring all-gather of A over the n-group
+    gather_b_bytes: int           # ZeRO-3 all-gather of B over (m x batch)
+    partials_bytes: int           # reduce-scatter / all-reduce of partial C
+    hideable_s: float             # wire seconds the schedule can overlap
+    total_s: float                # wire seconds before any overlap
+
+    @property
+    def total_bytes(self) -> int:
+        return self.gather_a_bytes + self.gather_b_bytes + self.partials_bytes
+
+
+def _ring_wire(local_bytes: int, group: int, factor: float = 1.0) -> int:
+    """Per-device wire bytes of a ring collective over `group` devices.
+
+    all-gather / reduce-scatter move (group-1)/group of the local payload
+    per device (factor 1); all-reduce is reduce-scatter + all-gather
+    (factor 2).  Matches roofline._WIRE_FACTOR's large-N ring accounting.
+    """
+    if group <= 1:
+        return 0
+    return int(factor * (group - 1) * local_bytes // group)
+
+
+def collective_terms(d: MatmulDims, p: BlockPlan, chip: hw.ChipSpec,
+                     spec: ShardSpec) -> CollectiveTerms:
+    """Wire traffic + overlap potential for plan `p` under sharding `spec`.
+
+    `d` is the *global* problem; payloads are the post-gather per-device
+    shards.  Whether a transfer is hideable is schedule-dependent — the
+    windowed-einsum condition is that the kernel's grid makes progress on
+    chunks of the gathered operand as they arrive, i.e. the gathered dim
+    is blocked (>1 grid step) and is not swept by the innermost loop:
+
+      gather A (chunks along m) — hidden unless the schedule sweeps m
+        innermost (b_resident) or doesn't block m at all (splitk, gm==1).
+      gather B (chunks along n) — hidden unless n is innermost
+        (a_resident) or unblocked (gn==1).
+      partials — reduce-scatter streams per k-shard behind the next
+        window's compute; all-reduce is a barrier after the last partial
+        and is never hidden.
+    """
+    ld = spec.local_dims(d)
+    gm, gn, gk = p.grid(ld)
+    dt, acc = d.dtype_bytes, d.acc_bytes
+    ici_bw = chip.ici_bw_per_link * chip.ici_links
+
+    a_local = ld.batch * ld.m * ld.k * dt
+    gather_a = _ring_wire(a_local, spec.n)
+    b_local = ld.k * ld.n * dt
+    data_group = spec.m * spec.batch
+    gather_b = _ring_wire(b_local, data_group) if spec.zero3 else 0
+    c_partial = ld.batch * ld.m * ld.n * acc
+    factor = 2.0 if spec.partials == "all_reduce" else 1.0
+    partials = _ring_wire(c_partial, spec.k, factor)
+
+    gather_a_s = gather_a / ici_bw
+    gather_b_s = gather_b / ici_bw
+    partials_s = partials / ici_bw
+    hideable = 0.0
+    if gm > 1 and p.schedule not in ("b_resident", "splitk"):
+        hideable += gather_a_s
+    if gn > 1 and p.schedule != "a_resident":
+        hideable += gather_b_s
+    if gk > 1 and spec.partials == "reduce_scatter":
+        hideable += partials_s
+    return CollectiveTerms(
+        gather_a_bytes=gather_a, gather_b_bytes=gather_b,
+        partials_bytes=partials, hideable_s=hideable,
+        total_s=gather_a_s + gather_b_s + partials_s)
+
+
+def cost_sharded_matmul(d: MatmulDims, p: BlockPlan, chip: hw.ChipSpec,
+                        spec: ShardSpec, *,
+                        local: MatmulCost | None = None) -> MatmulCost:
+    """Evaluate plan `p` for the per-device shard of `d` under `spec`.
+
+    The returned cost's `dims` are the local shard (so roofline fractions
+    stay per-chip numbers comparable to fig5), `global_dims` the unsharded
+    problem.  Exposed collective time is total wire time minus the part
+    the schedule hides behind its own busy time (never below zero), so a
+    sharded plan never prices below the same plan on its local shard —
+    the planner's floor invariant.  `local` lets the planner's joint
+    search pass the already-priced local cost instead of re-deriving it.
+    """
+    if local is None:
+        local = cost_matmul(spec.local_dims(d), p, chip)
+    coll = collective_terms(d, p, chip, spec)
+    busy = max(local.compute_s, local.memory_s)
+    hidden = min(coll.hideable_s, busy) * OVERLAP_EFFICIENCY
+    return dataclasses.replace(
+        local, sharding=spec, global_dims=d,
+        collective_bytes=coll.total_bytes,
+        collective_s=coll.total_s - hidden,
+        hidden_collective_s=hidden)

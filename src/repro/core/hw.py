@@ -27,6 +27,13 @@ class ChipSpec:
     hbm_bw: float               # bytes/s
     ici_bw_per_link: float      # bytes/s per ICI link
     vmem_bytes: int             # usable VMEM per core (fast on-chip memory)
+    # Number of inter-chip links per chip.  Aggregate interconnect
+    # bandwidth is always `ici_bw_per_link * ici_links` — collective cost
+    # terms (costmodel.ShardSpec, roofline.analyze, launch.costprobe)
+    # price wire bytes against that product, never against a hardcoded
+    # link count.  The GC200 has 10 IPU-Links, not the 4 the old
+    # "per-link = aggregate/4" convention implied.
+    ici_links: int = 4
     mxu_lanes: int = 128        # systolic array minor dim (lane granularity)
     mxu_sublanes: int = 8       # fp32 sublane granularity
     hbm_bytes: int = 16 * 1024**3
@@ -51,6 +58,11 @@ class ChipSpec:
     # chips are memory-bound at these shapes anyway, so the knob rarely
     # decides for them.
     gemv_splitk_frac: float = 0.25
+
+    @property
+    def ici_bw(self) -> float:
+        """Aggregate interconnect bytes/s (per-link bandwidth x link count)."""
+        return self.ici_bw_per_link * self.ici_links
 
 
 # ----------------------------------------------------------------- registry
@@ -93,6 +105,7 @@ TPU_V5E = register_chip(ChipSpec(
     peak_fp32_flops=197e12 / 4,   # bf16x3-style emulation; fp32 is not MXU-native
     hbm_bw=819e9,
     ici_bw_per_link=50e9,
+    ici_links=4,                 # 2-D torus: 4 ICI links per chip
     # Conservative usable VMEM figure; the planner only ever claims
     # amp * vmem_bytes of it (AMP = the paper's availableMemoryProportion knob).
     vmem_bytes=64 * 1024**2,
@@ -106,7 +119,11 @@ IPU_GC200 = register_chip(ChipSpec(
     peak_bf16_flops=62.5e12,     # GC200 quotes fp16.16 AMP peak ~250; fp32 62.5
     peak_fp32_flops=62.5e12,
     hbm_bw=47.5e12,              # aggregate In-Processor SRAM bandwidth
-    ici_bw_per_link=350e9 / 4,
+    # 10 IPU-Links at 32 GB/s each (320 GB/s aggregate).  The old entry
+    # stored aggregate/4 under an implied 4-link convention; collective
+    # terms now multiply by the honest link count instead.
+    ici_bw_per_link=32e9,
+    ici_links=10,
     vmem_bytes=918 * 1024**2,    # all memory is on-chip
     grid_step_overhead_s=600e-9, # vertex scheduling is costlier on Poplar
     # Uniform-latency In-Processor SRAM: block gather is nearly free —
@@ -124,7 +141,8 @@ GPU_A30 = register_chip(ChipSpec(
     peak_bf16_flops=165e12,
     peak_fp32_flops=10.3e12,
     hbm_bw=933e9,
-    ici_bw_per_link=200e9 / 4,
+    ici_bw_per_link=50e9,        # NVLink3: 4 links x 50 GB/s (200 GB/s agg)
+    ici_links=4,
     # Planner-visible fast memory on a GPU is the L2 (24 MB on GA100-class
     # A30): blocks that fit amp * L2 stream from HBM once, like the
     # VMEM-resident blocks they model.
@@ -142,8 +160,8 @@ GPU_RTX2080TI = register_chip(ChipSpec(
     peak_bf16_flops=107e12,
     peak_fp32_flops=13.45e12,
     hbm_bw=616e9,
-    ici_bw_per_link=100e9 / 4,   # NVLink2 bridge ~100 GB/s aggregate;
-                                 # per-link = aggregate/4 (repo convention)
+    ici_bw_per_link=50e9,        # NVLink2 bridge: 2 links x 50 GB/s
+    ici_links=2,                 # (~100 GB/s aggregate)
     vmem_bytes=int(5.5 * 1024**2),
     hbm_bytes=11 * 1024**3,
     grid_step_overhead_s=0.0,

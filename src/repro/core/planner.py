@@ -33,7 +33,8 @@ from typing import Iterable
 
 from repro.core import config, hw
 from repro.core.costmodel import (ALL_SCHEDULES, SCHEDULES, BlockPlan,
-                                  MatmulCost, MatmulDims, cost_matmul)
+                                  MatmulCost, MatmulDims, ShardSpec,
+                                  cost_matmul, cost_sharded_matmul)
 from repro.obs import spans as _obs
 
 
@@ -178,9 +179,60 @@ def enumerate_plans(m: int, k: int, n: int, *, dtype_bytes: int = 2,
     return costs[:top]
 
 
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+@functools.lru_cache(maxsize=1024)
+def shard_candidates(devices: int, m: int, k: int, n: int,
+                     batch: int = 1) -> tuple[ShardSpec, ...]:
+    """Every way to factor `devices` chips over the four matmul dims.
+
+    Ordered factorizations (batch, m, k, n) with each shard count a
+    divisor of the device count and no count exceeding its dim (idle
+    chips are never the argmin, so pruning them only saves search time).
+    k-split candidates carry partials="all_reduce" — the conservative
+    choice whose output is replicated in the k-group like the input; a
+    caller that can consume k-sharded outputs asks for "reduce_scatter"
+    via an explicit ShardSpec.  Weights stay resident (zero3=False): the
+    serving stack this repo grows toward gathers activations, not params.
+    """
+    specs = []
+    for sb in _divisors(devices):
+        if sb > batch:
+            continue
+        rem_b = devices // sb
+        for sm in _divisors(rem_b):
+            if sm > m:
+                continue
+            rem_m = rem_b // sm
+            for sk in _divisors(rem_m):
+                sn = rem_m // sk
+                if sk > k or sn > n:
+                    continue
+                specs.append(ShardSpec(m=sm, k=sk, n=sn, batch=sb))
+    if not specs:
+        # Degenerate tiny problem (every factorization over-shards some
+        # dim): replicate rather than fail, mirroring _guard's fallback.
+        specs.append(ShardSpec())
+    return tuple(specs)
+
+
+def _sharded_order(c: MatmulCost) -> tuple:
+    """Deterministic ranking across (ShardSpec x schedule x blocks):
+    modeled time first, then less exposed collective, then the local
+    plan order, then the spec's candidate-generation position (fewer
+    k/n/m/batch splits first)."""
+    s = c.sharding or ShardSpec()
+    return (c.total_s, c.collective_s) + _plan_order(c) + (
+        s.batch, s.m, s.k, s.n)
+
+
 def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
                 amp: float | None = None, chip: hw.ChipSpec | str | None = None,
-                mode: str | None = None, batch: int = 1) -> MatmulCost:
+                mode: str | None = None, batch: int = 1,
+                mesh_shape: tuple | None = None,
+                sharding: ShardSpec | str | None = None) -> MatmulCost:
     """Choose a (schedule, block shape) plan for A[batch, m, k] @ B[k, n].
 
     amp / chip / mode left as None resolve through the active `mm_config`
@@ -208,9 +260,28 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
                      (costed on the actual dims), a miss — or a cached plan
                      that no longer fits the budget — falls back to the
                      modeled "skew_aware" plan.
+
+    Sharded planning: when the resolved config carries a `mesh_shape`
+    with more than one chip, the search runs jointly over (schedule x
+    blocks x ShardSpec): every candidate sharding's *per-device* shard
+    dims are block-searched and priced with the collective terms
+    (`cost_sharded_matmul`), and the global argmin wins.  `sharding`
+    (kwarg or `mm_config` field) as an explicit `ShardSpec` pins the
+    split and searches only (schedule x blocks); "auto" / None searches
+    the full space.  "tuned" mode falls back to the modeled sharded
+    search — tune-cache entries are single-chip shape classes.
     """
-    cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode)
-    if cfg.plan_mode == "tuned":
+    cfg = config.resolve(amp=amp, chip=chip, plan_mode=mode,
+                         mesh_shape=mesh_shape, sharding=sharding)
+    devices = cfg.mesh_devices
+    if devices > 1:
+        spec = cfg.sharding if isinstance(cfg.sharding, ShardSpec) else None
+        smode = cfg.plan_mode if cfg.plan_mode != "tuned" else "skew_aware"
+        cost = _plan_matmul_sharded_cached(
+            m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
+            chip=cfg.chip_spec, mode=smode, batch=batch,
+            devices=devices, spec=spec)
+    elif cfg.plan_mode == "tuned":
         # Tuned plans depend on the *active tune cache* (mutable state),
         # so they are resolved outside the lru cache — only the modeled
         # fallback below is memoized.
@@ -232,12 +303,23 @@ def plan_matmul(m: int, k: int, n: int, *, dtype_bytes: int = 2,
 
 def _count_candidates(m: int, k: int, n: int, *, dtype_bytes: int,
                       amp: float, chip: hw.ChipSpec, mode: str,
-                      batch: int) -> int:
+                      batch: int, devices: int = 1,
+                      spec: ShardSpec | None = None) -> int:
     """Feasible candidate count for the plan span — mirrors the search
-    space (`_feasible_costs` / `_gemv_costs` / batch-grid) but checks
-    only the VMEM budget, never pricing a candidate.  Trace-time only."""
+    space (`_feasible_costs` / `_gemv_costs` / batch-grid / the sharded
+    joint search) but checks only the VMEM budget, never pricing a
+    candidate.  Trace-time only."""
     d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
     budget = int(amp * chip.vmem_bytes)
+    if devices > 1 and mode != "naive":
+        # The joint search runs the local block search once per candidate
+        # ShardSpec: the span's candidate count sums the per-spec counts.
+        specs = (spec,) if spec is not None else shard_candidates(
+            devices, m, k, n, batch)
+        return sum(
+            _count_candidates(ld.m, ld.k, ld.n, dtype_bytes=dtype_bytes,
+                              amp=amp, chip=chip, mode=mode, batch=ld.batch)
+            for ld in (s.local_dims(d) for s in specs))
     if mode == "naive":
         return 1
 
@@ -273,21 +355,34 @@ def _count_candidates(m: int, k: int, n: int, *, dtype_bytes: int,
 def _emit_plan_span(m: int, k: int, n: int, *, batch: int, dtype_bytes: int,
                     cfg, cost: MatmulCost) -> None:
     """One "plan" span per resolution, stamped with the search outcome;
-    also annotates the enclosing dispatch span with the modeled time."""
+    also annotates the enclosing dispatch span with the modeled time.
+    Sharded plans carry the chosen ShardSpec and their collective
+    attribution (exposed + hidden wire microseconds)."""
     p = cost.plan
     modeled_us = cost.total_s * 1e6
+    devices = cfg.mesh_devices
+    pinned = cfg.sharding if isinstance(cfg.sharding, ShardSpec) else None
+    extra: dict = {}
+    dispatch_extra: dict = {}
+    if cost.sharding is not None:
+        extra = dispatch_extra = dict(
+            sharding=cost.sharding.describe(), devices=devices,
+            collective_us=cost.collective_s * 1e6,
+            hidden_collective_us=cost.hidden_collective_s * 1e6,
+        )
     _obs.event(
         "plan", f"dense/{cfg.plan_mode}",
         m=m, k=k, n=n, batch=batch, chip=cfg.chip_spec.name,
         candidates=_count_candidates(m, k, n, dtype_bytes=dtype_bytes,
                                      amp=cfg.amp, chip=cfg.chip_spec,
-                                     mode=cfg.plan_mode, batch=batch),
+                                     mode=cfg.plan_mode, batch=batch,
+                                     devices=devices, spec=pinned),
         schedule=p.schedule, blocks=(p.bm, p.bk, p.bn),
         batch_grid=p.batch_grid, grid_steps=cost.grid_steps,
-        modeled_us=modeled_us,
+        modeled_us=modeled_us, **extra,
     )
     _obs.annotate("dispatch", modeled_us=modeled_us, schedule=p.schedule,
-                  grid_steps=cost.grid_steps)
+                  grid_steps=cost.grid_steps, **dispatch_extra)
 
 
 def _plan_matmul_tuned(m: int, k: int, n: int, *, dtype_bytes: int,
@@ -353,6 +448,77 @@ def _plan_matmul_cached(m: int, k: int, n: int, *, dtype_bytes: int,
         # rather than erroring, and keeps the AMP sweep benchmark total.
         best = cost_matmul(d, BlockPlan(chip.mxu_sublanes, chip.mxu_lanes,
                                         chip.mxu_lanes), chip)
+    return best
+
+
+def _naive_shard(devices: int, d: MatmulDims) -> ShardSpec:
+    """The library-default sharding the naive baseline uses: pure data
+    parallelism — split rows (batch folded) as far as the divisors allow,
+    never k or n, no collective-aware choice."""
+    best = ShardSpec()
+    for s in shard_candidates(devices, d.m, d.k, d.n, d.batch):
+        if s.k == 1 and s.n == 1 and s.m * s.batch > best.m * best.batch:
+            best = s
+    return best
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_matmul_sharded_cached(m: int, k: int, n: int, *, dtype_bytes: int,
+                                amp: float, chip: hw.ChipSpec, mode: str,
+                                batch: int, devices: int,
+                                spec: ShardSpec | None) -> MatmulCost:
+    """Joint (schedule x blocks x ShardSpec) argmin over `devices` chips.
+
+    Every candidate sharding's per-device shard dims get the full block
+    search (including the batch-grid variant and, at decode-scale local
+    rows, the split-K GEMV family), each candidate is priced with its
+    collective terms, and `_sharded_order` picks the global winner.  An
+    explicit `spec` pins the sharding and searches only (schedule x
+    blocks) — the caller knows how its operands are laid out.
+    """
+    d = MatmulDims(m=m, k=k, n=n, dtype_bytes=dtype_bytes, batch=batch)
+    budget = int(amp * chip.vmem_bytes)
+
+    if mode == "naive":
+        # Fixed square blocks on the per-device shard of a fixed DP
+        # sharding — the pod-scale analogue of the single-chip baseline.
+        d = dataclasses.replace(d, m=m * batch, batch=1)
+        s = spec if spec is not None else _naive_shard(devices, d)
+        ld = s.local_dims(d)
+        p = _clip_plan(BlockPlan(512, 512, 512), ld, chip, budget)
+        return cost_sharded_matmul(d, p, chip, s)
+
+    specs = (spec,) if spec is not None else shard_candidates(
+        devices, m, k, n, batch)
+    schedules = ("k_inner",) if mode == "k_inner" else SCHEDULES
+    best: MatmulCost | None = None
+
+    def consider(local: MatmulCost, s: ShardSpec) -> None:
+        nonlocal best
+        if best is not None and local.total_s > best.total_s:
+            # Exposed collective time is never negative, so the local
+            # cost lower-bounds the sharded cost: skip the wire pricing.
+            # (Ties still get priced — `_sharded_order` breaks them.)
+            return
+        c = cost_sharded_matmul(d, local.plan, chip, s, local=local)
+        if best is None or _sharded_order(c) < _sharded_order(best):
+            best = c
+
+    for s in specs:
+        ld = s.local_dims(d)
+        for local in _feasible_costs(ld, chip, budget, schedules):
+            consider(local, s)
+        if mode == "skew_aware" and gemv_applicable(ld.m, ld.batch, chip):
+            for local in _gemv_costs(ld, chip, budget):
+                consider(local, s)
+        if ld.batch > 1 and mode != "k_inner":
+            for local in _feasible_costs(ld, chip, budget, ("k_inner",),
+                                         batch_grid=True):
+                consider(local, s)
+    if best is None:
+        s = spec if spec is not None else ShardSpec()
+        p = BlockPlan(chip.mxu_sublanes, chip.mxu_lanes, chip.mxu_lanes)
+        best = cost_sharded_matmul(d, p, chip, s)
     return best
 
 

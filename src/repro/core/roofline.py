@@ -159,9 +159,16 @@ class RooflineReport:
 
 def analyze(compiled, hlo_text: str, *, arch: str, shape: str, mesh: str,
             chips: int, model_flops: float,
-            dtype_bytes: int = 2, ici_links: int = 4,
+            dtype_bytes: int = 2, ici_links: int | None = None,
             chip: hw.ChipSpec = hw.TPU_V5E) -> RooflineReport:
-    """Build a RooflineReport from a compiled executable + its HLO text."""
+    """Build a RooflineReport from a compiled executable + its HLO text.
+
+    `ici_links` defaults to the chip's own link count (`ChipSpec.ici_links`
+    — e.g. 10 IPU-Links on the GC200, not the 4 the old hardcoded default
+    assumed); pass it only to model a deliberately reduced topology.
+    """
+    if ici_links is None:
+        ici_links = chip.ici_links
     ca = compat.cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     hbm_bytes = float(ca.get("bytes accessed", 0.0))

@@ -177,7 +177,8 @@ def matmul(a: jax.Array, b: jax.Array, *, backend: str | None = None,
                        backend=cfg.backend, epilogue=str(ep.spec)) as dsp:
         cost = plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
                            chip=cfg.chip_spec, mode=cfg.plan_mode,
-                           batch=batch)
+                           batch=batch, mesh_shape=cfg.mesh_shape,
+                           sharding=cfg.sharding)
         _record(cost)
 
         out_dtype = cfg.out_dtype or a.dtype

@@ -60,9 +60,19 @@ def _axis_size(mesh: Mesh, axes) -> int:
 
 def _guard(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
     """Replace any spec entry whose mesh-axis product doesn't divide the
-    corresponding dim with None (replicate that dim)."""
+    corresponding dim with None (replicate that dim).
+
+    A spec *longer* than the shape is a rule bug, not a divisibility
+    problem: silently truncating it (the old `zip` behavior) would shard
+    fewer dims than asked with no signal, so it raises instead.
+    """
+    entries = tuple(spec)
+    if len(entries) > len(shape):
+        raise ValueError(
+            f"PartitionSpec {spec} has {len(entries)} entries for a "
+            f"{len(shape)}-D shape {shape}; spec must not outrank the value")
     fixed = []
-    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+    for dim, axes in zip(shape, entries + (None,) * (len(shape) - len(entries))):
         fixed.append(axes if dim % _axis_size(mesh, axes) == 0 else None)
     return P(*fixed)
 
@@ -104,6 +114,15 @@ def param_spec(path_names: list[str], leaf, mesh: Mesh) -> P:
         return base(P("model"), 1)
     if name in ("conv_w", "conv_x") and ndim >= 2:
         return base(P(None, "model"), 2)
+    if ndim >= 2:
+        # An unrecognized >=2-D weight replicates silently — that is the
+        # safe fallback, but on a real mesh it costs memory and collective
+        # bandwidth, so make it visible: the obs metrics registry counts
+        # every fall-through (`sharding.unmatched_params`) and provenance
+        # snapshots pick it up via the guard/obs counter surface.
+        from repro.obs import metrics as _metrics
+
+        _metrics.REGISTRY.inc("sharding.unmatched_params")
     return P(*(None,) * ndim)
 
 
@@ -213,3 +232,44 @@ def shard_like(tree, specs, mesh: Mesh):
     """device_put a concrete pytree according to a spec pytree."""
     return jax.tree.map(
         lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+
+
+# ------------------------------------------------- planner bridge (ShardSpec)
+def matmul_shard_spec(mesh: Mesh, *, batch_axes=None, m_axes=None,
+                      k_axes=None, n_axes=None, partials: str = "all_reduce",
+                      zero3: bool = False):
+    """Derive the planner's `costmodel.ShardSpec` from named mesh axes.
+
+    Each kwarg names the mesh axis (or tuple of axes) a matmul dim is
+    split over; the shard count is the product of those axis sizes.  This
+    is how the name-based rules above talk to the cost model: e.g. a
+    Megatron column-parallel GEMM on mesh (data=4, model=2) is
+    ``matmul_shard_spec(mesh, batch_axes="data", n_axes="model")``.  Works
+    with `AbstractMesh` too — only axis sizes are read, no devices.
+    """
+    from repro.core.costmodel import ShardSpec
+
+    return ShardSpec(
+        m=_axis_size(mesh, m_axes), k=_axis_size(mesh, k_axes),
+        n=_axis_size(mesh, n_axes), batch=_axis_size(mesh, batch_axes),
+        partials=partials, zero3=zero3)
+
+
+def tp_matmul_spec(mesh: Mesh, kind: str, *, dp: bool = True):
+    """The two Megatron tensor-parallel GEMM conventions as ShardSpecs.
+
+    kind="col" — column-parallel (wq/w_up...): N over "model", activations
+    gathered over the n-group.  kind="row" — row-parallel (wo/w_down...):
+    K over "model", partials all-reduced.  `dp` additionally splits batch
+    over the data axes when the mesh has them.
+    """
+    if kind not in ("col", "row"):
+        raise ValueError(f"kind must be 'col' or 'row', got {kind!r}")
+    batch_axes = None
+    if dp:
+        present = tuple(a for a in dp_axes(mesh) if a in mesh.axis_names)
+        batch_axes = present or None
+    if kind == "col":
+        return matmul_shard_spec(mesh, batch_axes=batch_axes, n_axes="model")
+    return matmul_shard_spec(mesh, batch_axes=batch_axes, k_axes="model",
+                             partials="all_reduce")

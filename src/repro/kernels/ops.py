@@ -161,7 +161,9 @@ def skew_matmul(a: jax.Array, b: jax.Array, *, plan: BlockPlan | None = None,
                 return _conservative_plan(cfg.chip_spec)
             return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
                                chip=cfg.chip_spec,
-                               mode=_level_mode(level, cfg)).plan
+                               mode=_level_mode(level, cfg),
+                               mesh_shape=cfg.mesh_shape,
+                               sharding=cfg.sharding).plan
 
         def validate_plan(p: BlockPlan, level: str) -> None:
             _validate.validate_dense(p, m, k, n, dtype_bytes=dtype_bytes,
@@ -222,7 +224,9 @@ def skew_matmul_batched(a: jax.Array, b: jax.Array, *,
                 return _conservative_plan(cfg.chip_spec)
             return plan_matmul(m, k, n, dtype_bytes=dtype_bytes, amp=cfg.amp,
                                chip=cfg.chip_spec, batch=nb,
-                               mode=_level_mode(level, cfg)).plan
+                               mode=_level_mode(level, cfg),
+                               mesh_shape=cfg.mesh_shape,
+                               sharding=cfg.sharding).plan
 
         def validate_plan(p: BlockPlan, level: str) -> None:
             _validate.validate_dense(p, m, k, n, batch=nb,

@@ -497,7 +497,8 @@ class CellProber:
             collective_bytes=cost.coll_bytes,
             compute_s=cost.flops / peak,
             memory_s=cost.bytes / chip.hbm_bw,
-            collective_s=cost.coll_bytes / (chip.ici_bw_per_link * 4),
+            collective_s=cost.coll_bytes / (chip.ici_bw_per_link
+                                            * chip.ici_links),
             model_flops=mflops, peak_flops=peak,
             bytes_per_device=0, collective_counts=cost.coll_counts)
         rec = rep.to_json()

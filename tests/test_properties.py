@@ -266,3 +266,87 @@ def test_guarded_matmul_never_escapes_silently(kinds, fault_seed, rate,
             guard.health.get("faults_injected")
     finally:
         guard.reset()
+
+
+# ------------------------------------------------------ sharding-rule props
+from jax.sharding import AbstractMesh, PartitionSpec as P  # noqa: E402
+
+from repro.distributed import sharding as shd  # noqa: E402
+
+PROP_MESH = AbstractMesh((("data", 4), ("model", 8)))
+
+_axis_entries = st.sampled_from([None, "data", "model", ("data", "model")])
+_shapes = st.lists(st.integers(1, 512), min_size=1, max_size=4)
+
+
+def _size(axes) -> int:
+    return shd._axis_size(PROP_MESH, axes)
+
+
+@SET
+@given(shape=_shapes, entries=st.lists(_axis_entries, max_size=5))
+def test_guard_spec_invariants(shape, entries):
+    """_guard never emits a spec that outranks the value or asks for an
+    indivisible split — and an overlong spec raises instead of silently
+    truncating."""
+    shape = tuple(shape)
+    spec = P(*entries)
+    if len(entries) > len(shape):
+        with pytest.raises(ValueError):
+            shd._guard(spec, shape, PROP_MESH)
+        return
+    out = tuple(shd._guard(spec, shape, PROP_MESH))
+    assert len(out) == len(shape)
+    for dim, axes in zip(shape, out):
+        size = _size(axes)
+        assert dim % size == 0
+        # sharded -> gathered round-trip preserves the dim
+        assert (dim // size) * size == dim
+
+
+_param_names = st.sampled_from(
+    ["wq", "wo", "embed", "unembed", "w_gate", "mystery", "conv_w", "bq"])
+
+
+@SET
+@given(name=_param_names,
+       shape=st.lists(st.sampled_from([1, 8, 16, 64, 128, 256, 31]),
+                      min_size=1, max_size=4))
+def test_param_spec_invariants(name, shape):
+    """Every rule output matches the leaf's rank and only asks for
+    divisible splits, whatever the name/rank combination."""
+    import jax
+
+    shape = tuple(shape)
+    # abstract leaf: param_spec only reads .shape, and materializing a
+    # (256, 256, 256, 256) zeros array would be 17 GB
+    leaf = jax.ShapeDtypeStruct(shape, jnp.float32)
+    spec = shd.param_spec([name], leaf, PROP_MESH)
+    out = tuple(spec)
+    assert len(out) == len(shape)
+    for dim, axes in zip(shape, out):
+        assert dim % _size(axes) == 0
+
+
+@SET
+@given(shape=st.lists(st.sampled_from([4, 8, 64, 128, 31, 256]),
+                      min_size=1, max_size=4),
+       model_on=st.integers(-1, 3))
+def test_zero1_spec_invariants(shape, model_on):
+    """ZeRO-1 only ever adds a divisible "data" split on a replicated dim
+    and never touches dims the param spec already sharded."""
+    shape = tuple(shape)
+    entries = [None] * len(shape)
+    if 0 <= model_on < len(shape) and shape[model_on] % 8 == 0:
+        entries[model_on] = "model"
+    spec = P(*entries)
+    out = tuple(shd.zero1_spec(spec, shape, PROP_MESH))
+    assert len(out) == len(shape)
+    for dim, before, after in zip(shape, entries, out):
+        if before is not None:
+            assert after == before        # pre-sharded dims untouched
+        assert dim % _size(after) == 0
+        assert (dim // _size(after)) * _size(after) == dim
+    # at most one data axis added
+    added = [a for b, a in zip(entries, out) if b is None and a is not None]
+    assert len(added) <= 1 and all(a == "data" for a in added)

@@ -107,3 +107,30 @@ def test_shard_like_puts_arrays():
     tree = {"w": jnp.ones((4, n * 2), jnp.float32)}
     out = shd.shard_like(tree, {"w": P(None, "model")}, mesh)
     assert out["w"].sharding.spec == P(None, "model")
+
+
+def test_guard_raises_on_overlong_spec():
+    """A spec with more entries than the value has dims is a rule bug —
+    the old zip() silently truncated it; now it raises."""
+    import pytest
+
+    with pytest.raises(ValueError, match="outrank"):
+        shd._guard(P("model", None, None), (64, 64), MESH)
+    # exact-rank and under-rank specs still pass through
+    assert tuple(shd._guard(P("model", None), (64, 64), MESH))[0] == "model"
+    assert len(tuple(shd._guard(P("model"), (64, 64, 64), MESH))) == 3
+
+
+def test_param_spec_unmatched_counter():
+    """Silent replication of an unrecognized >=2-D weight is counted."""
+    from repro.obs import metrics
+
+    leaf = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    before = metrics.REGISTRY.value("sharding.unmatched_params")
+    spec = shd.param_spec(["mystery_weight"], leaf, MESH)
+    assert tuple(spec) == (None, None)
+    assert metrics.REGISTRY.value("sharding.unmatched_params") == before + 1
+    # recognized names and vectors don't count
+    shd.param_spec(["wq"], leaf, MESH)
+    shd.param_spec(["bias"], jax.ShapeDtypeStruct((256,), jnp.float32), MESH)
+    assert metrics.REGISTRY.value("sharding.unmatched_params") == before + 1
